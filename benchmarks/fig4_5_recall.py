@@ -1,0 +1,92 @@
+"""Paper Figures 4 & 5: query time vs recall for top-10 NNs, Euclidean and
+Angular, across search frameworks (LCCS / MP-LCCS / E2LSH / Multi-Probe /
+C2LSH / FALCONN-like).  Parameters are grid-searched per method and the
+lower envelope is reported, mirroring the paper's methodology."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import CsvRows, dataset, ground_truth, overall_ratio, recall, timed
+
+
+def _sweep_lccs(X, Q, gt, gt_d, angular, probes_list=(1,), m=64, csv=None, tag=""):
+    from repro.core import LCCSIndex
+
+    fam = "angular" if angular else "euclidean"
+    w = 16.0  # tuned to the synthetic data scale (paper fine-tunes w, fn.11)
+    def _build():
+        idx = LCCSIndex.build(X, m=m, family=fam, w=w, seed=0)
+        import jax
+        jax.block_until_ready(idx.csa.I)  # dataclass isn't a pytree
+        return idx
+
+    idx, t_build = timed(_build, repeats=1)
+    pts = []
+    for probes in probes_list:
+        for lam in (20, 50, 100, 200, 400):
+            (ids, dists), t = timed(
+                idx.query, Q, k=10, lam=lam, probes=probes, repeats=2
+            )
+            r = recall(np.asarray(ids), gt)
+            pts.append((r, t / Q.shape[0], lam, probes,
+                        overall_ratio(dists, gt_d, angular)))
+    if csv is not None:
+        best = max(pts)
+        csv.add(f"fig45/{tag}", best[1], f"recall={best[0]:.3f};lam={best[2]}")
+    return pts, t_build
+
+
+def _sweep_static(X, Q, gt, gt_d, angular, method_cls, name, csv, grid):
+    pts = []
+    for kw in grid:
+        m = method_cls.build(X, seed=0, **kw)
+        (ids, dists), t = timed(
+            m.query, Q, k=10, lam=400, cap_per_table=128, repeats=2
+        )
+        r = recall(np.asarray(ids), gt)
+        pts.append((r, t / Q.shape[0], str(kw)))
+    best = max(pts)
+    csv.add(f"fig45/{name}", best[1], f"recall={best[0]:.3f}")
+    return pts
+
+
+def run(csv: CsvRows, n=8000):
+    results = {}
+    for metric_name, ds in (("euclid", "sift-like"), ("angular", "glove-like")):
+        X, Q, angular = dataset(ds, n=n)
+        gt, gt_d = ground_truth(X, Q, 10, angular)
+        w = 16.0 if not angular else 4.0
+
+        lccs_pts, _ = _sweep_lccs(X, Q, gt, gt_d, angular, (1,),
+                                  csv=csv, tag=f"lccs-{metric_name}")
+        mp_pts, _ = _sweep_lccs(X, Q, gt, gt_d, angular, (9, 33),
+                                csv=csv, tag=f"mp-lccs-{metric_name}")
+
+        from repro.baselines import C2LSH, E2LSH, FALCONNLike, MultiProbeLSH
+
+        e2_grid = [dict(K=2, L=16, w=w), dict(K=4, L=32, w=w)]
+        if angular:
+            e2_grid = [dict(K=1, L=16, family="angular"), dict(K=2, L=32, family="angular")]
+        e2 = _sweep_static(X, Q, gt, gt_d, angular, E2LSH, f"e2lsh-{metric_name}", csv, e2_grid)
+        mp_grid = (
+            [dict(K=4, L=8, w=w, n_probes=8)] if not angular
+            else [dict(K=2, L=8, family="angular", n_probes=8)]
+        )
+        mpl = _sweep_static(X, Q, gt, gt_d, angular, MultiProbeLSH,
+                            f"mplsh-{metric_name}", csv, mp_grid)
+        c2 = _sweep_static(X, Q, gt, gt_d, angular, C2LSH, f"c2lsh-{metric_name}",
+                           csv, [dict(m=64, w=w, l_threshold=2) if not angular
+                                 else dict(m=64, family="angular", l_threshold=2)])
+        if angular:
+            _sweep_static(X, Q, gt, gt_d, angular, FALCONNLike,
+                          f"falconn-{metric_name}", csv,
+                          [dict(K=2, L=32, n_probes=8)])
+        results[metric_name] = {"lccs": lccs_pts, "mp": mp_pts, "e2": e2,
+                                "mplsh": mpl, "c2": c2}
+    return results
+
+
+if __name__ == "__main__":
+    csv = CsvRows()
+    res = run(csv)
+    csv.dump()

@@ -1,0 +1,56 @@
+"""Paper Figures 6 & 7: query time vs index size / indexing time at a fixed
+recall target (paper uses 50%).  LCCS/MP-LCCS sweep m; E2LSH sweeps L."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import CsvRows, dataset, ground_truth, recall, timed
+
+
+def run(csv: CsvRows, n=8000, target=0.5):
+    X, Q, angular = dataset("sift-like", n=n)
+    gt, _ = ground_truth(X, Q, 10, angular)
+    rows = []
+
+    from repro.core import LCCSIndex
+
+    for m in (16, 32, 64, 128):
+        def _build(m=m):
+            idx = LCCSIndex.build(X, m=m, family="euclidean", w=16.0, seed=0)
+            import jax
+            jax.block_until_ready(idx.csa.I)
+            return idx
+
+        idx, t_build = timed(_build, repeats=1)
+        size = idx.index_bytes()
+        # cheapest query params hitting the target recall
+        best_t = None
+        for probes in (1, 9):
+            for lam in (20, 50, 100, 200, 400):
+                (ids, _), t = timed(idx.query, Q, k=10, lam=lam, probes=probes, repeats=2)
+                if recall(ids, gt) >= target and (best_t is None or t < best_t):
+                    best_t = t
+        rows.append(("lccs", m, size, t_build, best_t))
+        csv.add(f"fig67/lccs-m{m}",
+                (best_t or float("nan")) / Q.shape[0],
+                f"bytes={size};build_s={t_build:.2f}")
+
+    from repro.baselines import E2LSH
+
+    for L in (8, 16, 32, 64):
+        e2, t_build = timed(
+            lambda L=L: E2LSH.build(X, K=4, L=L, w=16.0, seed=0), repeats=1
+        )
+        size = e2.stats()["index_bytes"]
+        (ids, _), t = timed(e2.query, Q, k=10, lam=400, cap_per_table=128, repeats=2)
+        hit = recall(ids, gt) >= target
+        rows.append(("e2lsh", L, size, t_build, t if hit else None))
+        csv.add(f"fig67/e2lsh-L{L}", (t if hit else float("nan")) / Q.shape[0],
+                f"bytes={size};build_s={t_build:.2f};hit={hit}")
+    return rows
+
+
+if __name__ == "__main__":
+    csv = CsvRows()
+    run(csv)
+    csv.dump()

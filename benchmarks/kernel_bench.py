@@ -1,0 +1,39 @@
+"""Kernel micro-benchmarks: Pallas (interpret-mode on CPU -- correctness
+path; TPU timings are the deployment target) vs the pure-jnp oracle, plus
+the CSA build primitive.  Reported for completeness; wall times on this CPU
+container measure the oracle path."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .common import CsvRows, timed
+
+
+def run(csv: CsvRows):
+    from repro.kernels.circrun.ref import circrun_ref
+    from repro.kernels.hash_rp.ref import hash_rp_ref
+    from repro.core.csa import build_csa
+
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.integers(0, 64, (20000, 64)).astype(np.int32))
+    q = jnp.asarray(rng.integers(0, 64, (64,)).astype(np.int32))
+    _, t = timed(lambda: circrun_ref(h, q).block_until_ready(), repeats=3)
+    csv.add("kernels/circrun-20k-m64", t, "jnp-oracle")
+
+    x = jnp.asarray(rng.normal(size=(20000, 128)).astype(np.float32))
+    a = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0, 4, 64).astype(np.float32))
+    _, t = timed(lambda: hash_rp_ref(x, a, b, w=4.0).block_until_ready(), repeats=3)
+    csv.add("kernels/hash_rp-20k-d128-m64", t, "jnp-oracle")
+
+    hh = jnp.asarray(rng.integers(0, 16, (20000, 32)).astype(np.int32))
+    _, t = timed(lambda: build_csa(hh).I.block_until_ready(), repeats=2)
+    csv.add("kernels/csa_build-20k-m32", t, "doubling-rank")
+    return None
+
+
+if __name__ == "__main__":
+    csv = CsvRows()
+    run(csv)
+    csv.dump()

@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from .common import CsvRows
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    n = 4000 if quick else 8000
+    csv = CsvRows()
+    t0 = time.time()
+    from . import fig4_5_recall, fig6_7_indexing, fig8_k, fig9_m, fig10_probes
+    from . import kernel_bench, table1_scaling
+
+    print("# fig4/5: query time vs recall (Euclidean + Angular)", flush=True)
+    fig4_5_recall.run(csv, n=n)
+    print("# fig6/7: query time vs index size / build time", flush=True)
+    fig6_7_indexing.run(csv, n=n)
+    print("# fig8: sensitivity to k", flush=True)
+    fig8_k.run(csv, n=n)
+    print("# fig9: impact of m", flush=True)
+    fig9_m.run(csv, n=n)
+    print("# fig10: impact of #probes", flush=True)
+    fig10_probes.run(csv, n=n)
+    print("# table1: complexity scaling in n", flush=True)
+    table1_scaling.run(csv)
+    print("# kernels", flush=True)
+    kernel_bench.run(csv)
+
+    print(f"# total bench wall time: {time.time()-t0:.1f}s")
+    print("name,us_per_call,derived")
+    csv.dump()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Table 1: space/time complexity scaling in n.
+
+Measures CSA build time, index bytes, and per-query time for LCCS-LSH vs
+C2LSH vs linear scan over doubling n, and reports the fitted exponent of
+query time in n (LCCS should stay ~flat vs C2LSH's O(n))."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import CsvRows, dataset, ground_truth, timed
+
+
+def run(csv: CsvRows):
+    from repro.baselines import C2LSH, LinearScan
+    from repro.core import LCCSIndex
+
+    ns = (2000, 4000, 8000, 16000)
+    rows = {"lccs": [], "c2lsh": [], "linear": []}
+    for n in ns:
+        X, Q, angular = dataset("sift-like", n=n)
+        def _build():
+            idx = LCCSIndex.build(X, m=32, family="euclidean", w=16.0, seed=0)
+            import jax
+            jax.block_until_ready(idx.csa.I)
+            return idx
+
+        idx, t_build = timed(_build, repeats=1)
+        _, t = timed(idx.query, Q, k=10, lam=100, repeats=2)
+        rows["lccs"].append((n, t / Q.shape[0], t_build, idx.index_bytes()))
+
+        c2 = C2LSH.build(X, m=32, w=16.0, seed=0)
+        _, t = timed(c2.query, Q, k=10, lam=100, repeats=2)
+        rows["c2lsh"].append((n, t / Q.shape[0], 0.0, c2.stats()["index_bytes"]))
+
+        lin = LinearScan.build(X)
+        _, t = timed(lin.query, Q, k=10, repeats=2)
+        rows["linear"].append((n, t / Q.shape[0], 0.0, 0))
+
+    out = {}
+    for name, pts in rows.items():
+        n_arr = np.log([p[0] for p in pts])
+        t_arr = np.log([p[1] for p in pts])
+        slope = float(np.polyfit(n_arr, t_arr, 1)[0])
+        out[name] = slope
+        times = ";".join(f"n{p[0]}={p[1]*1e6:.0f}us" for p in pts)
+        csv.add(f"table1/{name}-n{ns[-1]}", pts[-1][1],
+                f"time_exponent={slope:.2f};{times};bytes={pts[-1][3]}")
+    # space is O(nm): bytes should double with n
+    b = [p[3] for p in rows["lccs"]]
+    csv.add("table1/lccs-space-ratio", 0.0, f"bytes_n2x_ratio={b[-1]/b[-2]:.2f}")
+    return out, rows
+
+
+if __name__ == "__main__":
+    csv = CsvRows()
+    print(run(csv)[0])
+    csv.dump()

@@ -1,0 +1,63 @@
+"""End-to-end serving driver (the paper's kind of workload): a small LM
+backbone embeds a corpus, LCCS-LSH indexes the embeddings, and a stream of
+batched requests is served with verified top-k retrieval.
+
+    PYTHONPATH=src python examples/serve_ann.py [--arch gemma-2b]
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.data.synthetic import lm_token_batches
+from repro.models import api
+from repro.serve import RetrievalEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=sorted(ARCHS))
+    ap.add_argument("--corpus", type=int, default=512)
+    ap.add_argument("--requests", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].smoke()  # reduced config: CPU-runnable backbone
+    params = api.init_model(jax.random.key(0), cfg)
+    print(f"backbone: {args.arch} (reduced) params={api.param_count(params):,}")
+
+    gen = lm_token_batches(vocab=cfg.vocab, seed=0)
+    corpus, _ = gen(0, args.corpus, 32)
+
+    engine = RetrievalEngine(cfg, params, m=32, metric="angular", max_batch=32)
+    t0 = time.time()
+    engine.build_index(corpus)
+    print(f"corpus indexed: {args.corpus} docs in {time.time()-t0:.1f}s "
+          f"({engine.index.index_bytes()/1e6:.2f} MB)")
+
+    # request stream: near-duplicates of corpus docs (known answers)
+    rng = np.random.default_rng(1)
+    picks = rng.integers(0, args.corpus, args.requests)
+    requests = [corpus[i] for i in picks]
+
+    t0 = time.time()
+    results = engine.serve_stream(requests, k=5, lam=64)
+    wall = time.time() - t0
+    hits = sum(int(picks[i] in ids) for i, (ids, _) in enumerate(results))
+    s = engine.stats
+    print(
+        f"served {s.requests} requests in {s.batches} micro-batches, "
+        f"{wall*1e3/len(requests):.1f} ms/req "
+        f"(embed {s.embed_s:.1f}s search {s.search_s:.1f}s)"
+    )
+    print(f"self-retrieval hit rate: {hits}/{args.requests}")
+    assert hits >= 0.9 * args.requests, "retrieval quality regression"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""The paper's comparison set, reimplemented in JAX (§6.3).
+
+  * LinearScan        -- exact ground truth.
+  * E2LSH             -- static concatenating framework (Indyk/Datar):
+                         L tables of K concatenated functions.
+  * MultiProbeLSH     -- E2LSH tables + Lv et al. probing sequence.
+  * FALCONNLike       -- cross-polytope static tables + vertex probing.
+  * C2LSH             -- dynamic collision counting framework (Gan et al.).
+
+All share the LSH families from repro.core.lsh and the same verification
+path, so benchmark differences isolate the *search framework* -- the paper's
+actual subject.
+"""
+from .methods import C2LSH, E2LSH, FALCONNLike, LinearScan, MultiProbeLSH
+
+__all__ = ["C2LSH", "E2LSH", "FALCONNLike", "LinearScan", "MultiProbeLSH"]

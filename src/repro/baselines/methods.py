@@ -1,0 +1,238 @@
+"""Baseline ANN methods (paper §6.3) sharing repro.core's LSH families."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lsh as lsh_mod
+from repro.core import multiprobe
+from repro.core.index import verify_candidates
+
+_PRIME = (1 << 31) - 1  # classic E2LSH t1-hash modulus
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LinearScan:
+    """Exact scan; the recall/ratio ground truth."""
+
+    data: jax.Array
+    metric: str = "euclidean"
+
+    @staticmethod
+    def build(data, metric="euclidean", **_):
+        return LinearScan(jnp.asarray(data, jnp.float32), metric)
+
+    def query(self, queries, k=10, **_):
+        queries = jnp.asarray(queries, jnp.float32)
+        d = lsh_mod.distance(self.data[None, :, :], queries[:, None, :], self.metric)
+        neg, idx = jax.lax.top_k(-d, k)
+        return idx, -neg
+
+    def stats(self):
+        return {"tables": 0, "hash_fns": 0, "index_bytes": 0}
+
+
+# ---------------------------------------------------------------------------
+# Static concatenating framework
+# ---------------------------------------------------------------------------
+
+
+class _StaticTables:
+    """L sorted tables of compound bucket ids (host-side numpy lookups)."""
+
+    def __init__(self, buckets: np.ndarray):  # (n, L) int64
+        self.n, self.L = buckets.shape
+        self.order = np.argsort(buckets, axis=0, kind="stable")  # (n, L)
+        self.sorted = np.take_along_axis(buckets, self.order, axis=0)
+
+    def lookup(self, q_buckets: np.ndarray, cap_per_table: int) -> np.ndarray:
+        """q_buckets: (P, L) probe buckets -> candidate ids (deduped, 1-D)."""
+        out = []
+        for t in range(self.L):
+            col = self.sorted[:, t]
+            los = np.searchsorted(col, q_buckets[:, t], side="left")
+            his = np.searchsorted(col, q_buckets[:, t], side="right")
+            for lo, hi in zip(los, his):
+                hi = min(hi, lo + cap_per_table)
+                if hi > lo:
+                    out.append(self.order[lo:hi, t])
+        if not out:
+            return np.empty((0,), np.int64)
+        return np.unique(np.concatenate(out))
+
+    def nbytes(self) -> int:
+        return self.order.nbytes + self.sorted.nbytes
+
+
+def _compound_buckets(h: np.ndarray, coefs: np.ndarray) -> np.ndarray:
+    """(.., L, K) int hash values -> (.., L) compound bucket ids (t1 hashing)."""
+    return (h.astype(np.int64) * coefs[None, :, :]).sum(-1) % _PRIME
+
+
+@dataclass
+class E2LSH:
+    """Static concatenating framework: G_l(o) = (h_{l,1}(o) ... h_{l,K}(o))."""
+
+    family: Any
+    tables: _StaticTables
+    coefs: np.ndarray
+    data: jax.Array
+    metric: str
+    K: int
+    L: int
+
+    @staticmethod
+    def build(data, *, K=8, L=16, w=4.0, family="euclidean", seed=0, **fkw):
+        data = jnp.asarray(data, jnp.float32)
+        n, d = data.shape
+        fam = lsh_mod.make_family(family, jax.random.key(seed), d, K * L, w=w, **fkw)
+        h = np.asarray(fam.hash(data)).reshape(n, L, K)
+        rng = np.random.default_rng(seed + 1)
+        coefs = rng.integers(1, _PRIME, size=(L, K), dtype=np.int64)
+        tables = _StaticTables(_compound_buckets(h, coefs))
+        return E2LSH(fam, tables, coefs, data, fam.metric, K, L)
+
+    def _query_buckets(self, queries) -> np.ndarray:
+        B = queries.shape[0]
+        hq = np.asarray(self.family.hash(jnp.asarray(queries, jnp.float32)))
+        return _compound_buckets(hq.reshape(B, self.L, self.K), self.coefs)
+
+    def query(self, queries, k=10, cap_per_table=64, lam=None, **_):
+        queries = np.asarray(queries, np.float32)
+        qb = self._query_buckets(queries)
+        B = queries.shape[0]
+        lam = lam or max(k, 100)
+        ids = np.full((B, lam), -1, np.int32)
+        self.last_cands = 0
+        for b in range(B):
+            cand = self.tables.lookup(qb[b : b + 1], cap_per_table)[:lam]
+            ids[b, : len(cand)] = cand
+            self.last_cands += len(cand)
+        return verify_candidates(
+            self.data, jnp.asarray(queries), jnp.asarray(ids), k, self.metric
+        )
+
+    def stats(self):
+        return {
+            "tables": self.L,
+            "hash_fns": self.K * self.L,
+            "index_bytes": self.tables.nbytes(),
+        }
+
+
+@dataclass
+class MultiProbeLSH(E2LSH):
+    """E2LSH tables + Lv et al. 2007 probing: perturb the K-dim compound key
+    of each table in ascending boundary-distance score order."""
+
+    n_probes: int = 8
+
+    @staticmethod
+    def build(data, *, K=8, L=8, w=4.0, family="euclidean", seed=0, n_probes=8, **fkw):
+        base = E2LSH.build(data, K=K, L=L, w=w, family=family, seed=seed, **fkw)
+        return MultiProbeLSH(
+            base.family, base.tables, base.coefs, base.data, base.metric, base.K,
+            base.L, n_probes=n_probes,
+        )
+
+    def query(self, queries, k=10, cap_per_table=64, lam=None, n_probes=None, **_):
+        queries = np.asarray(queries, np.float32)
+        n_probes = n_probes or self.n_probes
+        B = queries.shape[0]
+        lam = lam or max(k, 100)
+        hq_all = np.asarray(self.family.hash(jnp.asarray(queries))).reshape(
+            B, self.L, self.K
+        )
+        ids = np.full((B, lam), -1, np.int32)
+        self.last_cands = 0
+        for b in range(B):
+            alt_vals, alt_scores = self.family.query_alternatives(queries[b])
+            alt_vals = alt_vals.reshape(self.L, self.K, -1)
+            alt_scores = alt_scores.reshape(self.L, self.K, -1)
+            probe_buckets = []
+            for t in range(self.L):
+                deltas = multiprobe.generate_perturbations(
+                    alt_scores[t], n_probes, max_gap=self.K
+                )
+                hq = hq_all[b, t]
+                base_bucket = int(
+                    (hq.astype(np.int64) * self.coefs[t]).sum() % _PRIME
+                )
+                row = []
+                for delta in deltas:
+                    bb = base_bucket
+                    for i, j in delta:
+                        bb = (
+                            bb
+                            + int(self.coefs[t, i])
+                            * (int(alt_vals[t, i, j]) - int(hq[i]))
+                        ) % _PRIME
+                    row.append(bb)
+                probe_buckets.append(row)
+            pb = np.asarray(probe_buckets, np.int64).T  # (P, L)
+            cand = self.tables.lookup(pb, cap_per_table)[:lam]
+            ids[b, : len(cand)] = cand
+            self.last_cands += len(cand)
+        return verify_candidates(
+            self.data, jnp.asarray(queries), jnp.asarray(ids), k, self.metric
+        )
+
+
+class FALCONNLike(MultiProbeLSH):
+    """Cross-polytope static tables + vertex probing (Andoni et al. 2015)."""
+
+    @staticmethod
+    def build(data, *, K=2, L=16, family="angular", seed=0, n_probes=8, **fkw):
+        base = E2LSH.build(data, K=K, L=L, family="angular", seed=seed, **fkw)
+        return FALCONNLike(
+            base.family, base.tables, base.coefs, base.data, base.metric, base.K,
+            base.L, n_probes=n_probes,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Dynamic collision counting framework
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class C2LSH:
+    """Gan et al. 2012: m single-function tables; o is a candidate once its
+    collision count reaches l.  The counting indicator is computed densely
+    (identical result to per-table lookups)."""
+
+    family: Any
+    h: jax.Array  # (n, m)
+    data: jax.Array
+    metric: str
+    l_threshold: int
+
+    @staticmethod
+    def build(data, *, m=64, w=4.0, family="euclidean", seed=0, l_threshold=None, **fkw):
+        data = jnp.asarray(data, jnp.float32)
+        n, d = data.shape
+        fam = lsh_mod.make_family(family, jax.random.key(seed), d, m, w=w, **fkw)
+        h = fam.hash(data)
+        return C2LSH(fam, h, data, fam.metric, l_threshold or max(2, m // 8))
+
+    def query(self, queries, k=10, lam=None, l_threshold=None, **_):
+        queries = jnp.asarray(queries, jnp.float32)
+        lam = lam or max(k, 100)
+        l_thr = l_threshold or self.l_threshold
+        hq = self.family.hash(queries)  # (B, m)
+        counts = (self.h[None, :, :] == hq[:, None, :]).sum(-1)  # (B, n)
+        vals, idx = jax.lax.top_k(counts, min(lam, self.h.shape[0]))
+        ids = jnp.where(vals >= l_thr, idx, -1).astype(jnp.int32)
+        self.last_cands = int((np.asarray(ids) >= 0).sum())
+        return verify_candidates(self.data, queries, ids, k, self.metric)
+
+    def stats(self):
+        m = self.h.shape[1]
+        return {"tables": m, "hash_fns": m, "index_bytes": self.h.size * 4}

@@ -1,0 +1,7 @@
+from .base import ModelConfig, SHAPES, ShapeCell, cell_applicable, input_specs
+from .registry import ARCHS, get_config
+
+__all__ = [
+    "ARCHS", "ModelConfig", "SHAPES", "ShapeCell", "cell_applicable",
+    "get_config", "input_specs",
+]

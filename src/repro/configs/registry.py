@@ -1,0 +1,28 @@
+"""Architecture registry: --arch <id> -> ModelConfig."""
+from __future__ import annotations
+
+from .base import ModelConfig, SHAPES, ShapeCell, cell_applicable, input_specs
+from .falcon_mamba_7b import CONFIG as falcon_mamba_7b
+from .gemma2_9b import CONFIG as gemma2_9b
+from .gemma3_1b import CONFIG as gemma3_1b
+from .gemma_2b import CONFIG as gemma_2b
+from .llama4_maverick_400b_a17b import CONFIG as llama4_maverick
+from .qwen2_7b import CONFIG as qwen2_7b
+from .qwen2_vl_7b import CONFIG as qwen2_vl_7b
+from .qwen3_moe_235b_a22b import CONFIG as qwen3_moe
+from .whisper_tiny import CONFIG as whisper_tiny
+from .zamba2_7b import CONFIG as zamba2_7b
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        qwen2_vl_7b, gemma_2b, gemma3_1b, gemma2_9b, qwen2_7b,
+        zamba2_7b, qwen3_moe, llama4_maverick, falcon_mamba_7b, whisper_tiny,
+    ]
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]

@@ -1,0 +1,32 @@
+"""LCCS-LSH core: the paper's contribution as a composable JAX module."""
+from .csa import CSA, build_csa, build_csa_oracle, lccs_length_oracle
+from .index import LCCSIndex, verify_candidates
+from .lsh import (
+    BitSamplingLSH,
+    CrossPolytopeLSH,
+    RandomProjectionLSH,
+    distance,
+    make_family,
+)
+from .bruteforce import bruteforce_topk, circ_run_lengths
+from .search import klccs_search
+from . import multiprobe, theory
+
+__all__ = [
+    "CSA",
+    "LCCSIndex",
+    "BitSamplingLSH",
+    "CrossPolytopeLSH",
+    "RandomProjectionLSH",
+    "build_csa",
+    "build_csa_oracle",
+    "lccs_length_oracle",
+    "bruteforce_topk",
+    "circ_run_lengths",
+    "klccs_search",
+    "verify_candidates",
+    "distance",
+    "make_family",
+    "multiprobe",
+    "theory",
+]

@@ -1,0 +1,48 @@
+"""Brute-force LCCS scoring: longest circular run of matches per row.
+
+|LCCS(T, Q)| equals the longest circular run of 1s in the element-wise match
+vector (T == Q) -- the observation that turns the paper's string search into
+a dense O(nm) VPU sweep.  Used (a) as the oracle for the `circrun` Pallas
+kernel, (b) as a shard-local beyond-paper search path for moderate n, and
+(c) for re-ranking in tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.jit
+def circ_run_lengths(h: jax.Array, q: jax.Array) -> jax.Array:
+    """h: (n, m) int32, q: (m,) int32 -> (n,) int32 LCCS lengths."""
+    n, m = h.shape
+    e = h == q[None, :]
+    ee = jnp.concatenate([e, e], axis=1)  # (n, 2m)
+    j = jnp.arange(1, 2 * m + 1, dtype=jnp.int32)
+    # position of most recent mismatch (1-based); run length ending at j is
+    # j - cummax(mismatch positions)
+    blockers = jnp.where(ee, 0, j[None, :])
+    last_block = lax.cummax(blockers, axis=1)
+    runs = j[None, :] - last_block
+    return jnp.minimum(jnp.max(runs, axis=1), m).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("lam",))
+def bruteforce_topk(h: jax.Array, q_hash: jax.Array, lam: int):
+    """Score every database string against each query; return top-lam ids/lcps.
+
+    h: (n, m) int32; q_hash: (B, m) int32 -> ids (B, lam), lcps (B, lam).
+    """
+
+    def one(q):
+        lengths = circ_run_lengths(h, q)
+        vals, idx = lax.top_k(lengths, min(lam, h.shape[0]))
+        if lam > h.shape[0]:
+            idx = jnp.pad(idx, (0, lam - h.shape[0]), constant_values=-1)
+            vals = jnp.pad(vals, (0, lam - h.shape[0]), constant_values=-1)
+        return idx.astype(jnp.int32), vals.astype(jnp.int32)
+
+    return jax.vmap(one)(q_hash)

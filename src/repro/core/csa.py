@@ -1,0 +1,136 @@
+"""Circular Shift Array (CSA) -- the paper's data structure (Algorithm 1),
+built TPU-natively.
+
+Paper formulation: for every circular shift i, sort shift(T, i) of all n hash
+strings alphabetically -> sorted indices I_i, plus next links N_i giving each
+string's position in the (i+1)-th order.
+
+TPU adaptation (DESIGN.md §3): instead of m dependent string quicksorts we run
+a *prefix-doubling rank construction* over the (n, m) hash matrix:
+
+  R^(0)[:, i]   = dense rank of column i
+  R^(l+1)[:, i] = dense rank of the pair (R^(l)[:, i], R^(l)[:, (i + 2^l) % m])
+
+After ceil(log2 m) rounds R[:, i] orders the circular strings starting at
+position i (comparing a prefix of length >= m of a period-m circular string
+is equivalent to comparing the full string).  Everything is `log2(m)` rounds
+of m batched 2-key sorts -- no string comparisons, no pointers.
+
+Outputs (all int32):
+  I (m, n): I[i] = argsort of shift-i strings            (paper's I_i)
+  P (m, n): P[i, t] = position of string t in I[i]       (paper's N_{i-1})
+  Hd (n, 2m): doubled hash matrix for O(1) circular slicing in the query phase.
+
+Space is O(nm), matching Theorem 3.1.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class CSA(NamedTuple):
+    I: jax.Array  # (m, n) int32  sorted order per shift
+    P: jax.Array  # (m, n) int32  position of each string per shift
+    Hd: jax.Array  # (n, 2m) int32 doubled hash strings
+
+    @property
+    def n(self) -> int:
+        return self.I.shape[1]
+
+    @property
+    def m(self) -> int:
+        return self.I.shape[0]
+
+
+def _dense_rank_1key(col: jax.Array) -> jax.Array:
+    """Dense rank (ties share rank) of a 1-D int array."""
+    order = jnp.argsort(col, stable=True)
+    sv = col[order]
+    new = jnp.concatenate([jnp.zeros((1,), jnp.int32), (sv[1:] != sv[:-1]).astype(jnp.int32)])
+    dense = jnp.cumsum(new)
+    return jnp.zeros_like(dense).at[order].set(dense)
+
+
+def _dense_rank_2key(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Dense rank of (a, b) pairs (a primary).  Two stable sorts (radix style)
+    instead of a packed 64-bit key so the kernel stays int32-clean."""
+    p1 = jnp.argsort(b, stable=True)
+    p2 = jnp.argsort(a[p1], stable=True)
+    order = p1[p2]
+    sa, sb = a[order], b[order]
+    new = jnp.concatenate(
+        [
+            jnp.zeros((1,), jnp.int32),
+            ((sa[1:] != sa[:-1]) | (sb[1:] != sb[:-1])).astype(jnp.int32),
+        ]
+    )
+    dense = jnp.cumsum(new)
+    return jnp.zeros_like(dense).at[order].set(dense)
+
+
+@partial(jax.jit, static_argnames=())
+def circular_ranks(h: jax.Array) -> jax.Array:
+    """(n, m) hash matrix -> (n, m) int32 R with R[:, i] the dense rank of the
+    circular string starting at position i."""
+    n, m = h.shape
+    r = jax.vmap(_dense_rank_1key, in_axes=1, out_axes=1)(h)
+    span = 1
+    while span < m:
+        r2 = jnp.roll(r, -span, axis=1)  # r2[:, i] = r[:, (i+span) % m]
+        r = jax.vmap(_dense_rank_2key, in_axes=(1, 1), out_axes=1)(r, r2)
+        span *= 2
+    return r.astype(jnp.int32)
+
+
+@jax.jit
+def build_csa(h: jax.Array) -> CSA:
+    """Algorithm 1, vectorised.  h: (n, m) int32 hash strings."""
+    n, m = h.shape
+    r = circular_ranks(h)  # (n, m)
+    # I[i] = stable argsort of shift-i ranks; P[i] = inverse permutation.
+    I = jax.vmap(lambda col: jnp.argsort(col, stable=True), in_axes=1, out_axes=0)(r)
+    I = I.astype(jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (m, n))
+    P = jnp.zeros((m, n), jnp.int32).at[jnp.arange(m)[:, None], I].set(pos)
+    Hd = jnp.concatenate([h, h], axis=1).astype(jnp.int32)
+    return CSA(I=I, P=P, Hd=Hd)
+
+
+# ---------------------------------------------------------------------------
+# Pure-numpy oracle (for tests): literal Algorithm 1.
+# ---------------------------------------------------------------------------
+
+
+def build_csa_oracle(h: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Literal paper Algorithm 1: for each shift, sort the shifted strings
+    lexicographically.  Returns (I, P) with the same meaning as build_csa.
+    O(m^2 n log n) -- test-size only."""
+    n, m = h.shape
+    I = np.empty((m, n), dtype=np.int64)
+    P = np.empty((m, n), dtype=np.int64)
+    for i in range(m):
+        shifted = np.concatenate([h[:, i:], h[:, :i]], axis=1)
+        # lexsort keys: last key is primary
+        order = np.lexsort(shifted[:, ::-1].T)
+        I[i] = order
+        P[i, order] = np.arange(n)
+    return I, P
+
+
+def lccs_length_oracle(t: np.ndarray, q: np.ndarray) -> int:
+    """|LCCS(T, Q)| = longest circular run of positions where t == q."""
+    e = (np.asarray(t) == np.asarray(q)).astype(np.int64)
+    m = e.shape[0]
+    if e.all():
+        return m
+    ee = np.concatenate([e, e])
+    best = run = 0
+    for v in ee:
+        run = run + 1 if v else 0
+        best = max(best, run)
+    return min(best, m)

@@ -1,0 +1,272 @@
+"""LCCSIndex -- the public API of the paper's scheme.
+
+Indexing phase (§4.1): hash every object with m i.i.d. LSH functions into a
+hash string; build the CSA.  Query phase: lambda-LCCS search for candidates,
+verify true distances, return the nearest k.
+
+MP-LCCS-LSH (§4.2): `probes > 1` generates Algorithm-3 perturbation vectors
+on host, batches the probe strings, searches them all on device, and merges
+candidates before verification.
+"""
+from __future__ import annotations
+
+import pickle
+from dataclasses import dataclass
+from functools import partial
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import lsh as lsh_mod
+from . import multiprobe
+from .bruteforce import bruteforce_topk
+from .csa import CSA, build_csa
+from .search import klccs_search
+
+
+@partial(jax.jit, static_argnames=("k", "metric"))
+def verify_candidates(
+    data: jax.Array,  # (n, d)
+    queries: jax.Array,  # (B, d)
+    cand_ids: jax.Array,  # (B, lam) int32, -1 padded
+    k: int,
+    metric: str,
+):
+    """Compute true distances for candidates and return the nearest k.
+    Returns (ids (B, k), dists (B, k)); missing slots are id=-1, dist=inf."""
+    safe = jnp.maximum(cand_ids, 0)
+    cand = data[safe]  # (B, lam, d)
+    dist = lsh_mod.distance(cand, queries[:, None, :], metric)
+    dist = jnp.where(cand_ids >= 0, dist, jnp.inf)
+    kk = min(k, cand_ids.shape[1])
+    neg, idx = jax.lax.top_k(-dist, kk)
+    ids = jnp.take_along_axis(cand_ids, idx, axis=1)
+    out_d = -neg
+    if kk < k:
+        ids = jnp.pad(ids, ((0, 0), (0, k - kk)), constant_values=-1)
+        out_d = jnp.pad(out_d, ((0, 0), (0, k - kk)), constant_values=jnp.inf)
+    return ids, out_d
+
+
+@dataclass
+class LCCSIndex:
+    family: Any  # LSH family (lsh.py)
+    data: jax.Array  # (n, d) original vectors
+    h: jax.Array  # (n, m) int32 hash strings
+    csa: CSA | None  # None for mode="bruteforce"-only indexes
+    metric: str
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def build(
+        data: jax.Array | np.ndarray,
+        *,
+        m: int = 64,
+        family: str = "euclidean",
+        seed: int = 0,
+        build_csa_structure: bool = True,
+        **family_kw,
+    ) -> "LCCSIndex":
+        data = jnp.asarray(data, dtype=jnp.float32)
+        n, d = data.shape
+        fam = lsh_mod.make_family(family, jax.random.key(seed), d, m, **family_kw)
+        h = fam.hash(data)
+        csa = build_csa(h) if build_csa_structure else None
+        return LCCSIndex(family=fam, data=data, h=h, csa=csa, metric=fam.metric)
+
+    @property
+    def n(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.h.shape[1]
+
+    def index_bytes(self) -> int:
+        """CSA + hash strings footprint (paper's 'index size')."""
+        tot = self.h.size * 4
+        if self.csa is not None:
+            tot += self.csa.I.size * 4 + self.csa.P.size * 4 + self.csa.Hd.size * 4
+        return tot
+
+    # -- candidate generation ----------------------------------------------
+
+    def candidates(
+        self,
+        queries: jax.Array,
+        lam: int,
+        *,
+        width: int | None = None,
+        mode: str = "parallel",
+        probes: int = 1,
+    ):
+        """lambda-LCCS search.  Returns (ids, lcps): (B, lam) each."""
+        queries = jnp.asarray(queries, dtype=jnp.float32)
+        qh = self.family.hash(queries)
+        if mode == "bruteforce":
+            return bruteforce_topk(self.h, qh, lam)
+        if self.csa is None:
+            raise ValueError("index built without CSA; use mode='bruteforce'")
+        width = width if width is not None else max(4, min(lam, 64))
+        if probes <= 1:
+            return klccs_search(self.csa, qh, lam, width=width, mode=mode)
+        if mode == "parallel":  # §4.2 skip-unaffected-positions (default)
+            return self._multiprobe_skip(queries, qh, lam, width, probes)
+        return self._multiprobe_full(queries, qh, lam, width, probes, mode)
+
+    def _probe_deltas(self, queries, qh_np, probes):
+        out = []
+        for b in range(qh_np.shape[0]):
+            vals, scores = self.family.query_alternatives(np.asarray(queries[b]))
+            deltas = multiprobe.generate_perturbations(scores, probes)
+            out.append((vals, deltas))
+        return out
+
+    def _multiprobe_full(self, queries, qh, lam, width, probes, mode):
+        """Every probe searches all m shifts (baseline MP path)."""
+        qh_np = np.asarray(qh)
+        all_probe_strings = []
+        for b, (vals, deltas) in enumerate(self._probe_deltas(queries, qh_np, probes)):
+            all_probe_strings.append(
+                multiprobe.apply_perturbations(qh_np[b], vals, deltas)
+            )
+        flat = jnp.asarray(np.concatenate(all_probe_strings, axis=0))  # (B*P, m)
+        ids, lcps = klccs_search(self.csa, flat, lam, width=width, mode=mode)
+        B = qh_np.shape[0]
+        ids = ids.reshape(B, -1)
+        lcps = lcps.reshape(B, -1)
+        from .search import dedupe_topk
+
+        return jax.vmap(lambda i, l: dedupe_topk(i, l, lam))(ids, lcps)
+
+    def _multiprobe_skip(self, queries, qh, lam, width, probes):
+        """Paper §4.2 'skip unaffected positions': a probe that modifies
+        positions P need only re-search shifts i whose base-query LCP window
+        [i, i + maxlen_i] covers some p in P -- every other shift provably
+        reproduces the base query's candidates, which the merge already
+        contains (the base search runs in full).  The (probe, shift) worklist
+        is padded and searched as one batched device call."""
+        from .search import dedupe_topk, klccs_search_pairs, klccs_search_with_lens
+
+        m = self.m
+        qh_np = np.asarray(qh)
+        B = qh_np.shape[0]
+        base_ids, base_lcps, maxlen = klccs_search_with_lens(
+            self.csa, qh, lam, width=width
+        )
+        maxlen = np.asarray(maxlen)  # (B, m)
+
+        pair_rows, pair_shifts, pair_owner = [], [], []
+        for b, (vals, deltas) in enumerate(self._probe_deltas(queries, qh_np, probes)):
+            strings = multiprobe.apply_perturbations(qh_np[b], vals, deltas)
+            for j, delta in enumerate(deltas):
+                if not delta:
+                    continue  # probe 0 == base query
+                mods = np.array([p for p, _ in delta])
+                # affected shifts: (p - i) mod m <= maxlen_i (+1 slack)
+                i_arr = np.arange(m)
+                dist = (mods[None, :] - i_arr[:, None]) % m  # (m, #mods)
+                affected = (dist <= np.minimum(maxlen[b] + 1, m - 1)[:, None]).any(1)
+                for i in np.nonzero(affected)[0]:
+                    pair_rows.append(strings[j])
+                    pair_shifts.append(i)
+                    pair_owner.append(b)
+        if pair_rows:
+            R = len(pair_rows)
+            R_pad = 1 << (R - 1).bit_length()  # pad to pow2: few jit variants
+            rows = np.zeros((R_pad, m), np.int32)
+            rows[:R] = np.stack(pair_rows)
+            shifts = np.zeros((R_pad,), np.int32)
+            shifts[:R] = pair_shifts
+            valid = np.zeros((R_pad,), bool)
+            valid[:R] = True
+            p_ids, p_lcps = klccs_search_pairs(
+                self.csa, jnp.asarray(rows), jnp.asarray(shifts),
+                jnp.asarray(valid), width=width,
+            )
+            p_ids, p_lcps = np.asarray(p_ids), np.asarray(p_lcps)
+            owner = np.asarray(pair_owner)
+            merged_ids, merged_lcps = [], []
+            for b in range(B):
+                sel = owner == np.int32(b)
+                extra_i = p_ids[:R][sel].reshape(-1)
+                extra_l = p_lcps[:R][sel].reshape(-1)
+                merged_ids.append(
+                    np.concatenate([np.asarray(base_ids[b]), extra_i])
+                )
+                merged_lcps.append(
+                    np.concatenate([np.asarray(base_lcps[b]), extra_l])
+                )
+            # ragged per-query merges: pad to the max length
+            L = max(len(x) for x in merged_ids)
+            mi = np.full((B, L), -1, np.int32)
+            ml = np.full((B, L), -1, np.int32)
+            for b in range(B):
+                mi[b, : len(merged_ids[b])] = merged_ids[b]
+                ml[b, : len(merged_lcps[b])] = merged_lcps[b]
+            return jax.vmap(lambda i, l: dedupe_topk(i, l, lam))(
+                jnp.asarray(mi), jnp.asarray(ml)
+            )
+        return base_ids, base_lcps
+
+    # -- full c-k-ANNS ------------------------------------------------------
+
+    def query(
+        self,
+        queries: jax.Array,
+        k: int = 10,
+        lam: int = 100,
+        **kw,
+    ):
+        """c-k-ANNS: lambda-LCCS candidates + true-distance verification.
+        Returns (ids (B, k), dists (B, k))."""
+        queries = jnp.asarray(queries, dtype=jnp.float32)
+        ids, _ = self.candidates(queries, lam, **kw)
+        return verify_candidates(self.data, queries, ids, k, self.metric)
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str | Path) -> None:
+        import dataclasses
+
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fam_fields = {
+            k: (np.asarray(v) if isinstance(v, jax.Array) else v)
+            for k, v in dataclasses.asdict(self.family).items()
+        }
+        blob = {
+            "family_cls": type(self.family).__name__,
+            "family_fields": fam_fields,
+            "data": np.asarray(self.data),
+            "h": np.asarray(self.h),
+            "csa": None if self.csa is None else [np.asarray(x) for x in self.csa],
+            "metric": self.metric,
+        }
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "wb") as f:
+            pickle.dump(blob, f)
+        tmp.rename(path)  # atomic
+
+    @staticmethod
+    def load(path: str | Path) -> "LCCSIndex":
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+        cls = getattr(lsh_mod, blob["family_cls"])
+        fields = {
+            k: (jnp.asarray(v) if isinstance(v, np.ndarray) else v)
+            for k, v in blob["family_fields"].items()
+        }
+        fam = cls(**fields)
+        csa = None if blob["csa"] is None else CSA(*[jnp.asarray(x) for x in blob["csa"]])
+        return LCCSIndex(
+            family=fam,
+            data=jnp.asarray(blob["data"]),
+            h=jnp.asarray(blob["h"]),
+            csa=csa,
+            metric=blob["metric"],
+        )

@@ -1,0 +1,247 @@
+"""LSH function families.
+
+LCCS-LSH is LSH-family-independent (paper §2.2/§4): the scheme only consumes
+the (n, m) int32 matrix of hash values.  Each family here provides:
+
+  hash(X: (n, d) float) -> (n, m) int32           batched hashing (jit-able)
+  query_alternatives(q: (d,)) -> (vals, scores)    multi-probe alternatives
+      vals:   (m, n_alt) int32  -- alternative hash values per position,
+      scores: (m, n_alt) float  -- ascending penalty per alternative
+                                   (reused by MP-LCCS-LSH, Algorithm 3).
+
+Families implemented:
+  * RandomProjectionLSH  -- Datar et al. 2004, Euclidean distance (Eq. 1).
+  * CrossPolytopeLSH     -- Andoni et al. 2015, Angular distance (Eq. 3).
+       rotation="gaussian" is the paper's exact definition (dense random
+       rotation); rotation="pseudo" is the FALCONN HD3HD2HD1 pseudo-rotation
+       (O(d log d), used by default for speed -- same LSH guarantees).
+  * BitSamplingLSH       -- Indyk & Motwani 1998, Hamming distance.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import theory
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << (x - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# Random projection family (Euclidean)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RandomProjectionLSH:
+    """h(o) = floor((a . o + b) / w)   (paper Eq. 1)."""
+
+    a: jax.Array  # (d, m)
+    b: jax.Array  # (m,)
+    w: float
+    metric: str = field(default="euclidean")
+
+    @staticmethod
+    def create(key: jax.Array, d: int, m: int, w: float) -> "RandomProjectionLSH":
+        ka, kb = jax.random.split(key)
+        a = jax.random.normal(ka, (d, m), dtype=jnp.float32)
+        b = jax.random.uniform(kb, (m,), dtype=jnp.float32, minval=0.0, maxval=w)
+        return RandomProjectionLSH(a=a, b=b, w=float(w))
+
+    @property
+    def m(self) -> int:
+        return self.a.shape[1]
+
+    @property
+    def d(self) -> int:
+        return self.a.shape[0]
+
+    def projections(self, x: jax.Array) -> jax.Array:
+        return x.astype(jnp.float32) @ self.a + self.b
+
+    def hash(self, x: jax.Array) -> jax.Array:
+        proj = self.projections(x)
+        return jnp.floor(proj / self.w).astype(jnp.int32)
+
+    def collision_prob(self, tau: float) -> float:
+        return theory.rp_collision_prob(tau, self.w)
+
+    def query_alternatives(self, q: np.ndarray, n_alt: int = 4):
+        """Multi-Probe LSH (Lv et al. 2007) alternatives: h +- j, scored by the
+        squared distance of the projection to the corresponding boundary."""
+        proj = np.asarray(self.projections(jnp.asarray(q)[None, :]))[0]  # (m,)
+        h = np.floor(proj / self.w).astype(np.int64)
+        f = proj - h * self.w  # in-bucket offset, [0, w)
+        vals, scores = [], []
+        for j in range(1, n_alt // 2 + 1):
+            vals.append(h + j)
+            scores.append(((j - 1) * self.w + (self.w - f)) ** 2)
+            vals.append(h - j)
+            scores.append(((j - 1) * self.w + f) ** 2)
+        vals = np.stack(vals, axis=1)  # (m, n_alt)
+        scores = np.stack(scores, axis=1)
+        order = np.argsort(scores, axis=1, kind="stable")
+        return (
+            np.take_along_axis(vals, order, axis=1).astype(np.int32),
+            np.take_along_axis(scores, order, axis=1),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Cross-polytope family (Angular)
+# ---------------------------------------------------------------------------
+
+
+def _hadamard_transform(x: jax.Array) -> jax.Array:
+    """Fast Walsh-Hadamard transform over the last axis (length = power of 2)."""
+    d = x.shape[-1]
+    h = 1
+    while h < d:
+        x = x.reshape(x.shape[:-1] + (d // (2 * h), 2, h))
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=-1).reshape(x.shape[:-3] + (d,))
+        h *= 2
+    return x
+
+
+@dataclass(frozen=True)
+class CrossPolytopeLSH:
+    """h(o) = index of the closest signed basis vector of the rotated o (Eq. 3).
+
+    Hash value in [0, 2*dr): index i for +e_i, dr + i for -e_i.
+    """
+
+    signs: jax.Array  # pseudo: (m, 3, dr) +-1; gaussian: unused
+    rot: jax.Array | None  # gaussian: (m, d, dr); pseudo: None
+    d: int
+    dr: int  # rotated dimension (power of two for pseudo)
+    rotation: str = field(default="pseudo")
+    metric: str = field(default="angular")
+
+    @staticmethod
+    def create(key: jax.Array, d: int, m: int, rotation: str = "pseudo") -> "CrossPolytopeLSH":
+        if rotation == "pseudo":
+            dr = _next_pow2(d)
+            signs = jax.random.rademacher(key, (m, 3, dr), dtype=jnp.float32)
+            return CrossPolytopeLSH(signs=signs, rot=None, d=d, dr=dr, rotation=rotation)
+        elif rotation == "gaussian":
+            rot = jax.random.normal(key, (m, d, d), dtype=jnp.float32) / math.sqrt(d)
+            return CrossPolytopeLSH(
+                signs=jnp.zeros((m, 0, 0)), rot=rot, d=d, dr=d, rotation=rotation
+            )
+        raise ValueError(f"unknown rotation {rotation!r}")
+
+    @property
+    def m(self) -> int:
+        return self.signs.shape[0] if self.rotation == "pseudo" else self.rot.shape[0]
+
+    def _rotate(self, x: jax.Array) -> jax.Array:
+        """(n, d) -> (n, m, dr) rotated copies."""
+        if self.rotation == "gaussian":
+            return jnp.einsum("nd,mde->nme", x, self.rot)
+        n = x.shape[0]
+        xp = jnp.pad(x, ((0, 0), (0, self.dr - self.d)))
+        y = xp[:, None, :] * self.signs[None, :, 0, :]  # (n, m, dr)
+        y = _hadamard_transform(y)
+        y = y * self.signs[None, :, 1, :]
+        y = _hadamard_transform(y)
+        y = y * self.signs[None, :, 2, :]
+        y = _hadamard_transform(y)
+        return y / jnp.sqrt(jnp.float32(self.dr))
+
+    def rotations(self, x: jax.Array) -> jax.Array:
+        return self._rotate(x.astype(jnp.float32))
+
+    def hash(self, x: jax.Array) -> jax.Array:
+        y = self.rotations(x)  # (n, m, dr)
+        idx = jnp.argmax(jnp.abs(y), axis=-1)  # (n, m)
+        sgn = jnp.take_along_axis(y, idx[..., None], axis=-1)[..., 0] < 0
+        return (idx + jnp.where(sgn, self.dr, 0)).astype(jnp.int32)
+
+    def collision_prob(self, tau: float) -> float:
+        return theory.xp_collision_prob(tau, self.dr)
+
+    def query_alternatives(self, q: np.ndarray, n_alt: int = 4):
+        """FALCONN-style alternatives: other cross-polytope vertices ranked by
+        margin (|y_top| - |y_j|)^2."""
+        y = np.asarray(self.rotations(jnp.asarray(q)[None, :]))[0]  # (m, dr)
+        ay = np.abs(y)
+        order = np.argsort(-ay, axis=1)  # best first
+        top = ay[np.arange(self.m)[:, None], order[:, :1]]  # (m, 1)
+        vals, scores = [], []
+        for j in range(1, n_alt + 1):
+            idx = order[:, j]
+            sgn = y[np.arange(self.m), idx] < 0
+            vals.append(idx + np.where(sgn, self.dr, 0))
+            scores.append((top[:, 0] - ay[np.arange(self.m), idx]) ** 2)
+        return (
+            np.stack(vals, axis=1).astype(np.int32),
+            np.stack(scores, axis=1),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Bit sampling family (Hamming)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BitSamplingLSH:
+    """h_i(o) = o[idx_i] for binary vectors (Indyk & Motwani 1998)."""
+
+    idx: jax.Array  # (m,)
+    d: int
+    metric: str = field(default="hamming")
+
+    @staticmethod
+    def create(key: jax.Array, d: int, m: int) -> "BitSamplingLSH":
+        idx = jax.random.randint(key, (m,), 0, d)
+        return BitSamplingLSH(idx=idx, d=d)
+
+    @property
+    def m(self) -> int:
+        return self.idx.shape[0]
+
+    def hash(self, x: jax.Array) -> jax.Array:
+        return x[:, self.idx].astype(jnp.int32)
+
+    def collision_prob(self, tau: float) -> float:
+        # tau = Hamming distance; p = 1 - tau/d
+        return max(0.0, 1.0 - tau / self.d)
+
+    def query_alternatives(self, q: np.ndarray, n_alt: int = 1):
+        qv = np.asarray(q)[np.asarray(self.idx)].astype(np.int32)
+        vals = (1 - qv)[:, None]  # flip the bit
+        scores = np.ones((self.m, 1), dtype=np.float64)
+        return vals, scores
+
+
+def make_family(kind: str, key: jax.Array, d: int, m: int, **kw):
+    if kind in ("rp", "euclidean", "random_projection"):
+        return RandomProjectionLSH.create(key, d, m, w=kw.get("w", 4.0))
+    if kind in ("xp", "angular", "cross_polytope"):
+        return CrossPolytopeLSH.create(key, d, m, rotation=kw.get("rotation", "pseudo"))
+    if kind in ("bits", "hamming", "bit_sampling"):
+        return BitSamplingLSH.create(key, d, m)
+    raise ValueError(f"unknown LSH family {kind!r}")
+
+
+def distance(x: jax.Array, y: jax.Array, metric: str) -> jax.Array:
+    """Pairwise-free distance between matching rows of x and y (broadcasting ok)."""
+    if metric == "euclidean":
+        return jnp.sqrt(jnp.maximum(jnp.sum((x - y) ** 2, axis=-1), 0.0))
+    if metric == "angular":
+        xn = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+        yn = y / jnp.linalg.norm(y, axis=-1, keepdims=True)
+        return 1.0 - jnp.sum(xn * yn, axis=-1)  # monotone in angle
+    if metric == "hamming":
+        return jnp.sum(x != y, axis=-1).astype(jnp.float32)
+    raise ValueError(f"unknown metric {metric!r}")

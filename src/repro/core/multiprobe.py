@@ -1,0 +1,80 @@
+"""MP-LCCS-LSH perturbation-vector generation (paper Algorithm 3).
+
+A perturbation vector delta is a list of (position, alternative-rank) pairs;
+probes are generated in ascending total-score order via a min-heap with the
+paper's p_shift / p_expand operators and the MAX_GAP constraint on adjacent
+modified positions.
+
+This is per-query control logic (a few hundred heap ops); it runs on host in
+numpy and feeds a *batched* device-side k-LCCS search over the probe strings
+(DESIGN.md §3, assumption change (ii)).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+
+import numpy as np
+
+MAX_GAP = 2  # paper §4.2: "We set MAX_GAP = 2 in practice."
+
+
+def generate_perturbations(
+    scores: np.ndarray,  # (m, n_alt) ascending per-position alternative scores
+    n_probes: int,
+    max_gap: int = MAX_GAP,
+) -> list[tuple[tuple[int, int], ...]]:
+    """Algorithm 3.  Returns a list of perturbation vectors (the first is the
+    empty "no perturbation" probe), each a tuple of (position, alt_rank).
+
+    Probes come out in ascending order of score(delta) = sum of entry scores.
+    """
+    m, n_alt = scores.shape
+    probes: list[tuple[tuple[int, int], ...]] = [()]
+    if n_probes <= 1:
+        return probes
+
+    counter = itertools.count()  # tie-break for the heap
+
+    def score_of(delta) -> float:
+        return float(sum(scores[i, j] for i, j in delta))
+
+    heap: list[tuple[float, int, tuple[tuple[int, int], ...]]] = []
+    for i in range(m):
+        delta = ((i, 0),)
+        heapq.heappush(heap, (score_of(delta), next(counter), delta))
+
+    while len(probes) < n_probes and heap:
+        s, _, delta = heapq.heappop(heap)
+        probes.append(delta)
+        # p_shift: advance the last entry to its next alternative
+        last_pos, last_rank = delta[-1]
+        if last_rank + 1 < n_alt:
+            shifted = delta[:-1] + ((last_pos, last_rank + 1),)
+            heapq.heappush(heap, (score_of(shifted), next(counter), shifted))
+        # p_expand: append (last_pos + gap, rank 0) for gap = 1..max_gap
+        for gap in range(1, max_gap + 1):
+            npos = last_pos + gap
+            if npos < m:
+                expanded = delta + ((npos, 0),)
+                heapq.heappush(heap, (score_of(expanded), next(counter), expanded))
+    return probes
+
+
+def apply_perturbations(
+    q_hash: np.ndarray,  # (m,) int32 base hash string
+    alt_vals: np.ndarray,  # (m, n_alt) int32 per-position alternatives
+    probes: list[tuple[tuple[int, int], ...]],
+) -> np.ndarray:
+    """Materialise the probe hash strings: (n_probes, m) int32."""
+    out = np.tile(q_hash[None, :], (len(probes), 1)).astype(np.int32)
+    for p, delta in enumerate(probes):
+        for i, j in delta:
+            out[p, i] = alt_vals[i, j]
+    return out
+
+
+def probe_positions(probes: list[tuple[tuple[int, int], ...]]) -> list[list[int]]:
+    """Modified positions per probe (for the skip-unaffected-positions
+    optimisation of §4.2)."""
+    return [[i for i, _ in delta] for delta in probes]

@@ -1,0 +1,217 @@
+"""k-LCCS search over a CSA (paper Algorithm 2), TPU-native.
+
+Two modes (DESIGN.md §3):
+
+  * "parallel"  -- all m binary searches run independently (vmap over shifts).
+                   O(m^2 log n) work, fully parallel.  Beyond-paper TPU layout.
+  * "narrowed"  -- paper-faithful Corollary 3.2 narrowing: a lax.scan over
+                   shifts carries the previous shift's lower/upper bounds and
+                   restricts the next binary search through the next-links P.
+
+Both modes replace the serial 2m-way priority-queue merge with *fixed-width
+window probing*: LCP against the query decreases monotonically moving away
+from the insertion position inside each sorted order (Fact 3.2), so the k
+candidates Algorithm 2 would pop from a list lie within a width-W window
+around the insertion point for any W >= k.  We gather all m windows, compute
+LCPs densely, dedupe by max-LCP per id, and take a global top-lambda
+(`lax.top_k`).  For W >= lambda the returned lengths elementwise dominate the
+exact Algorithm 2 result (proof sketch in DESIGN.md §3); W is a knob.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .csa import CSA
+
+
+def _lcp_and_less(row_d: jax.Array, qd: jax.Array, i: jax.Array, m: int):
+    """Compare circular strings starting at shift i.
+
+    row_d: (2m,) doubled data string; qd: (2m,) doubled query string.
+    Returns (lcp, data_less_than_query).
+    """
+    a = lax.dynamic_slice(row_d, (i,), (m,))
+    b = lax.dynamic_slice(qd, (i,), (m,))
+    neq = a != b
+    any_neq = jnp.any(neq)
+    f = jnp.argmax(neq)  # first mismatch (0 if none)
+    lcp = jnp.where(any_neq, f, m).astype(jnp.int32)
+    less = any_neq & (a[f] < b[f])
+    return lcp, less
+
+
+def _insertion_pos(csa: CSA, qd: jax.Array, i: jax.Array, lo0: jax.Array, hi0: jax.Array):
+    """Lower-bound binary search: #strings (within [lo0, hi0)) whose shift-i
+    circular string sorts strictly before the query's.  Fixed log2(n)+1 steps."""
+    n, m = csa.n, csa.m
+    steps = max(1, (n - 1).bit_length() + 1)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        t = csa.I[i, jnp.clip(mid, 0, n - 1)]
+        _, less = _lcp_and_less(csa.Hd[t], qd, i, m)
+        take = (mid < hi) & less
+        lo = jnp.where(take, mid + 1, lo)
+        hi = jnp.where(take, hi, jnp.minimum(hi, mid))
+        return lo, hi
+
+    lo, _ = lax.fori_loop(0, steps, body, (lo0, hi0))
+    return lo
+
+
+def _window(csa: CSA, qd: jax.Array, i: jax.Array, pos: jax.Array, width: int):
+    """Gather the 2*width window of sorted positions around insertion point
+    `pos` in I_i and compute each candidate's LCP with the shift-i query."""
+    n, m = csa.n, csa.m
+    offs = jnp.arange(-width, width, dtype=jnp.int32)
+    ps = jnp.clip(pos + offs, 0, n - 1)  # (2W,)
+    ids = csa.I[i, ps]  # (2W,)
+    rows = csa.Hd[ids]  # (2W, 2m)
+    a = lax.dynamic_slice(rows, (0, i), (2 * width, m))
+    b = lax.dynamic_slice(qd, (i,), (m,))[None, :]
+    neq = a != b
+    any_neq = jnp.any(neq, axis=1)
+    f = jnp.argmax(neq, axis=1)
+    lcps = jnp.where(any_neq, f, m).astype(jnp.int32)
+    # clipped duplicate window slots (pos at array edges) are deduped later
+    return ids, lcps
+
+
+def dedupe_topk(ids: jax.Array, lcps: jax.Array, lam: int):
+    """Max-LCP per id, then global top-lam.  Overflow-safe two-pass sort."""
+    p1 = jnp.argsort(-lcps, stable=True)
+    p2 = jnp.argsort(ids[p1], stable=True)
+    order = p1[p2]
+    si, sl = ids[order], lcps[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), si[1:] != si[:-1]])
+    score = jnp.where(first & (si >= 0), sl, -1)
+    k = min(lam, score.shape[0])
+    vals, idxs = lax.top_k(score, k)
+    out_ids = jnp.where(vals >= 0, si[idxs], -1)
+    if k < lam:  # pad to static lam
+        out_ids = jnp.pad(out_ids, (0, lam - k), constant_values=-1)
+        vals = jnp.pad(vals, (0, lam - k), constant_values=-1)
+    return out_ids, vals
+
+
+# ---------------------------------------------------------------------------
+# Parallel mode
+# ---------------------------------------------------------------------------
+
+
+def _search_parallel_1q(csa: CSA, qd: jax.Array, lam: int, width: int):
+    n, m = csa.n, csa.m
+
+    def per_shift(i):
+        pos = _insertion_pos(csa, qd, i, jnp.int32(0), jnp.int32(n))
+        return _window(csa, qd, i, pos, width)
+
+    ids, lcps = jax.vmap(per_shift)(jnp.arange(m, dtype=jnp.int32))
+    return dedupe_topk(ids.reshape(-1), lcps.reshape(-1), lam)
+
+
+def _search_parallel_1q_with_lens(csa: CSA, qd: jax.Array, lam: int, width: int):
+    """Like _search_parallel_1q but also returns the per-shift best LCP
+    (the paper's len_{l,i}/len_{u,i} bound, used by the multi-probe
+    skip-unaffected-positions optimisation of §4.2)."""
+    n, m = csa.n, csa.m
+
+    def per_shift(i):
+        pos = _insertion_pos(csa, qd, i, jnp.int32(0), jnp.int32(n))
+        ids_i, lcps_i = _window(csa, qd, i, pos, width)
+        return ids_i, lcps_i, jnp.max(lcps_i)
+
+    ids, lcps, maxlen = jax.vmap(per_shift)(jnp.arange(m, dtype=jnp.int32))
+    out_ids, out_lcps = dedupe_topk(ids.reshape(-1), lcps.reshape(-1), lam)
+    return out_ids, out_lcps, maxlen
+
+
+# ---------------------------------------------------------------------------
+# Narrowed (paper-faithful Corollary 3.2) mode
+# ---------------------------------------------------------------------------
+
+
+def _search_narrowed_1q(csa: CSA, qd: jax.Array, lam: int, width: int):
+    n, m = csa.n, csa.m
+
+    def step(carry, i):
+        pos, len_l, len_u = carry
+        # Corollary 3.2: if both neighbour LCPs >= 1 (and the neighbours
+        # T_l <= Q < T_u actually exist, i.e. the previous insertion point was
+        # interior), the next search range is [P[i, t_l], P[i, t_u] + 1);
+        # otherwise fall back to the full range.  Ties can still shift the
+        # lower-bound insertion point below P[i, t_l], so we keep lo0 = the
+        # narrowed bound only for the search and let the window (which reads
+        # I_i directly) recover tied neighbours.
+        ok = (len_l >= 1) & (len_u >= 1) & (i > 0) & (pos > 0) & (pos < n)
+        t_l = csa.I[(i - 1) % m, jnp.clip(pos - 1, 0, n - 1)]
+        t_u = csa.I[(i - 1) % m, jnp.clip(pos, 0, n - 1)]
+        lo0 = jnp.where(ok, csa.P[i, t_l], 0).astype(jnp.int32)
+        hi0 = jnp.where(ok, csa.P[i, t_u] + 1, n).astype(jnp.int32)
+        new_pos = _insertion_pos(csa, qd, i, lo0, hi0)
+        new_len_l, _ = _lcp_and_less(
+            csa.Hd[csa.I[i, jnp.clip(new_pos - 1, 0, n - 1)]], qd, i, m
+        )
+        new_len_u, _ = _lcp_and_less(
+            csa.Hd[csa.I[i, jnp.clip(new_pos, 0, n - 1)]], qd, i, m
+        )
+        ids, lcps = _window(csa, qd, i, new_pos, width)
+        return (new_pos, new_len_l, new_len_u), (ids, lcps)
+
+    init = (jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    _, (ids, lcps) = lax.scan(step, init, jnp.arange(m, dtype=jnp.int32))
+    return dedupe_topk(ids.reshape(-1), lcps.reshape(-1), lam)
+
+
+@partial(jax.jit, static_argnames=("lam", "width", "mode"))
+def klccs_search(
+    csa: CSA,
+    q_hash: jax.Array,  # (B, m) int32 query hash strings
+    lam: int,
+    width: int = 16,
+    mode: str = "parallel",
+):
+    """Batched k-LCCS search.  Returns (ids, lcps): (B, lam) int32 each;
+    ids are -1-padded when fewer than lam distinct candidates exist."""
+    qd = jnp.concatenate([q_hash, q_hash], axis=1).astype(jnp.int32)  # (B, 2m)
+    fn = _search_parallel_1q if mode == "parallel" else _search_narrowed_1q
+    return jax.vmap(lambda one: fn(csa, one, lam, width))(qd)
+
+
+@partial(jax.jit, static_argnames=("lam", "width"))
+def klccs_search_with_lens(csa: CSA, q_hash: jax.Array, lam: int, width: int = 16):
+    """Batched parallel search returning (ids, lcps, per-shift max LCP).
+    The len array feeds the §4.2 skip-unaffected-positions probe pruning."""
+    qd = jnp.concatenate([q_hash, q_hash], axis=1).astype(jnp.int32)
+    return jax.vmap(lambda one: _search_parallel_1q_with_lens(csa, one, lam, width))(qd)
+
+
+@partial(jax.jit, static_argnames=("width",))
+def klccs_search_pairs(
+    csa: CSA,
+    probe_hashes: jax.Array,  # (R, m) int32 probe strings
+    shifts: jax.Array,  # (R,) int32 shift to search for each row
+    valid: jax.Array,  # (R,) bool padding mask
+    width: int = 16,
+):
+    """Search ONE shift per (probe, shift) pair -- the worklist form of
+    MP-LCCS-LSH with unaffected positions skipped (paper §4.2): a probe only
+    re-searches shifts whose LCP window can see a modified position; all
+    other shifts provably return the base query's candidates, which are
+    already in the merged set.  Returns (ids (R, 2W), lcps (R, 2W))."""
+    n, m = csa.n, csa.m
+    qd = jnp.concatenate([probe_hashes, probe_hashes], axis=1).astype(jnp.int32)
+
+    def one(qd_r, i, ok):
+        pos = _insertion_pos(csa, qd_r, i, jnp.int32(0), jnp.int32(n))
+        ids_r, lcps_r = _window(csa, qd_r, i, pos, width)
+        ids_r = jnp.where(ok, ids_r, -1)
+        lcps_r = jnp.where(ok, lcps_r, -1)
+        return ids_r, lcps_r
+
+    return jax.vmap(one)(qd, shifts.astype(jnp.int32), valid)

@@ -1,0 +1,9 @@
+from .synthetic import clustered_vectors, lm_token_batches, paper_dataset_analogue
+from .pipeline import DataPipeline
+
+__all__ = [
+    "DataPipeline",
+    "clustered_vectors",
+    "lm_token_batches",
+    "paper_dataset_analogue",
+]

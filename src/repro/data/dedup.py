@@ -1,0 +1,78 @@
+"""LCCS-LSH near-duplicate filtering for the training data path -- the
+paper's index as a first-class pipeline stage (DESIGN.md §4.2).
+
+Documents are embedded (bag-of-token-hash features by default, or a real
+model embedder), hashed with the LCCS family, and a row is dropped when its
+LCCS length against the recent-history index exceeds a threshold (close
+embeddings share long circular runs of hash values w.h.p. -- the paper's
+core insight, used in reverse as a similarity detector)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_family
+from repro.core.bruteforce import circ_run_lengths
+
+
+def default_embedder(tokens: np.ndarray, dim: int = 64) -> np.ndarray:
+    """Cheap order-insensitive document embedding: hashed bag of tokens."""
+    n, _ = tokens.shape
+    out = np.zeros((n, dim), np.float32)
+    cols = (tokens.astype(np.int64) * 2654435761 % dim).astype(np.int64)
+    for i in range(n):
+        np.add.at(out[i], cols[i], 1.0)
+    norms = np.linalg.norm(out, axis=1, keepdims=True)
+    return out / np.maximum(norms, 1e-6)
+
+
+class NearDupFilter:
+    def __init__(
+        self,
+        *,
+        dim: int = 64,
+        m: int = 32,
+        threshold: int | None = None,
+        history: int = 4096,
+        seed: int = 0,
+        embedder=default_embedder,
+    ):
+        self.family = make_family("angular", jax.random.key(seed), dim, m)
+        self.m = m
+        self.dim = dim
+        self.threshold = threshold if threshold is not None else max(4, m // 2)
+        self.history = history
+        self.embedder = embedder
+        self._h = np.zeros((0, m), np.int32)
+        self.n_dropped = 0
+
+    def filter_batch(self, tokens: np.ndarray) -> np.ndarray:
+        """Returns keep mask (B,) bool; updates history with kept rows."""
+        emb = self.embedder(tokens, self.dim)
+        h = np.asarray(self.family.hash(jnp.asarray(emb)))
+        keep = np.ones(h.shape[0], bool)
+        if self._h.shape[0]:
+            hist = jnp.asarray(self._h)
+            for i in range(h.shape[0]):
+                best = int(jnp.max(circ_run_lengths(hist, jnp.asarray(h[i]))))
+                if best >= self.threshold:
+                    keep[i] = False
+        # also drop within-batch duplicates (later occurrence loses)
+        for i in range(h.shape[0]):
+            if not keep[i]:
+                continue
+            for j in range(i):
+                if keep[j]:
+                    e = np.concatenate([h[i] == h[j], h[i] == h[j]])
+                    run = best_run = 0
+                    for v in e:
+                        run = run + 1 if v else 0
+                        best_run = max(best_run, run)
+                    if min(best_run, self.m) >= self.threshold:
+                        keep[i] = False
+                        break
+        self.n_dropped += int((~keep).sum())
+        kept = h[keep]
+        self._h = np.concatenate([self._h, kept])[-self.history :]
+        return keep

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the LCCS-LSH hot spots (+ serving flash attention).
+
+Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle).  Validated in interpret mode on CPU;
+TPU v5e is the target.
+"""
+from .circrun.ops import circrun
+from .hash_rp.ops import hash_rp
+from .hash_xp.ops import hash_xp
+from .gather_l2.ops import gather_dist
+from .flash_attn.ops import flash_attention
+from .ssm_scan.ops import ssm_scan
+
+__all__ = ["circrun", "hash_rp", "hash_xp", "gather_dist", "flash_attention", "ssm_scan"]

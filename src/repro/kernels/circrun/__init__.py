@@ -1,0 +1,2 @@
+"""circrun kernel package."""
+from .ops import *  # noqa: F401,F403

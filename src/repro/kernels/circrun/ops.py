@@ -1,0 +1,33 @@
+"""Jit'd public wrapper for the circrun kernel (batched over queries)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret
+from .circrun import circrun_pallas
+from .ref import circrun_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_n"))
+def circrun(
+    h: jax.Array,  # (n, m) int32 database hash strings
+    q: jax.Array,  # (m,) or (B, m) int32 query hash strings
+    *,
+    use_pallas: bool = True,
+    block_n: int = 512,
+) -> jax.Array:
+    """LCCS lengths of every database string vs each query.
+    Returns (n,) for a single query or (B, n) for a batch."""
+    single = q.ndim == 1
+    qb = q[None, :] if single else q
+    if use_pallas:
+        fn = functools.partial(
+            circrun_pallas, block_n=block_n, interpret=default_interpret()
+        )
+    else:
+        fn = circrun_ref
+    out = jax.vmap(lambda one: fn(h, one))(qb)
+    return out[0] if single else out

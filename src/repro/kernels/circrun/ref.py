@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the circular-run LCCS scorer."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.jit
+def circrun_ref(h: jax.Array, q: jax.Array) -> jax.Array:
+    """h: (n, m) int32, q: (m,) int32 -> (n,) int32 longest circular run of
+    positions where h[i] == q (i.e. |LCCS(h[i], q)|)."""
+    n, m = h.shape
+    e = h == q[None, :]
+    ee = jnp.concatenate([e, e], axis=1)
+    j = jnp.arange(1, 2 * m + 1, dtype=jnp.int32)
+    blockers = jnp.where(ee, 0, j[None, :])
+    last_block = lax.cummax(blockers, axis=1)
+    runs = j[None, :] - last_block
+    return jnp.minimum(jnp.max(runs, axis=1), m).astype(jnp.int32)

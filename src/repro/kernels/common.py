@@ -1,0 +1,23 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode everywhere except real TPUs
+    (this container is CPU-only; TPU v5e is the deployment target)."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x, axis: int, multiple: int, value=0):
+    """Pad axis up to a multiple; returns (padded, original_size)."""
+    import jax.numpy as jnp
+
+    size = x.shape[axis]
+    target = (size + multiple - 1) // multiple * multiple
+    if target == size:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad, constant_values=value), size

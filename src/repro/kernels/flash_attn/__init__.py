@@ -1,0 +1,2 @@
+"""flash_attn kernel package."""
+from .ops import *  # noqa: F401,F403

@@ -1,0 +1,41 @@
+"""Jit'd public wrapper: batched multi-head (GQA) flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret
+from .flash_attn import flash_attn_pallas
+from .ref import attn_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "use_pallas")
+)
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, dh)
+    k: jax.Array,  # (B, Skv, Hkv, dh)
+    v: jax.Array,  # (B, Skv, Hkv, dh)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    use_pallas: bool = True,
+) -> jax.Array:
+    B, Sq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    groups = Hq // Hkv
+    kq = jnp.repeat(k, groups, axis=2) if groups > 1 else k
+    vq = jnp.repeat(v, groups, axis=2) if groups > 1 else v
+    fn = (
+        functools.partial(flash_attn_pallas, interpret=default_interpret())
+        if use_pallas
+        else attn_ref
+    )
+    one = functools.partial(fn, causal=causal, window=window, softcap=softcap)
+    # vmap over batch (axis 0), then heads (axis 1 of the per-batch (S, H, dh))
+    return jax.vmap(jax.vmap(one, in_axes=1, out_axes=1), in_axes=0, out_axes=0)(
+        q, kq, vq
+    )

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for blocked flash attention (single head)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
+def attn_ref(
+    q: jax.Array,  # (Sq, dh)
+    k: jax.Array,  # (Skv, dh)
+    v: jax.Array,  # (Skv, dh)
+    *,
+    causal: bool = True,
+    window: int = 0,  # 0 = full; else sliding window size
+    softcap: float = 0.0,  # 0 = off (gemma2-style logit soft capping)
+) -> jax.Array:
+    Sq, dh = q.shape
+    Skv = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)[:, None] + (Skv - Sq)  # align ends (decode-friendly)
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)

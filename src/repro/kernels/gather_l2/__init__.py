@@ -1,0 +1,2 @@
+"""gather_l2 kernel package."""
+from .ops import *  # noqa: F401,F403

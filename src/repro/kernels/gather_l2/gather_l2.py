@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: scalar-prefetch gather + fused L2/angular distance.
+
+Candidate verification is a data-dependent gather (candidate ids from the
+k-LCCS search) followed by a distance reduction.  On TPU the idiomatic form
+is a PrefetchScalarGridSpec kernel: the candidate-id array is prefetched to
+SMEM, and each grid step's BlockSpec *index_map* reads the id to select which
+HBM row of the database to DMA into VMEM -- the gather happens in the DMA
+pipeline, not as a gather op inside the kernel.
+
+Grid (B, L): each step verifies one candidate of one query; the (1, d) row
+DMA is double-buffered by the Pallas pipeline so the reduction overlaps the
+next row's fetch.  VMEM working set: 2 rows + query row (~3*d*4 bytes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_l2_kernel(ids_ref, data_ref, q_ref, o_ref, *, metric: str):
+    del ids_ref  # consumed by the index_map
+    row = data_ref[...]  # (1, d) gathered candidate row
+    qv = q_ref[...]  # (1, d)
+    if metric == "euclidean":
+        diff = row - qv
+        o_ref[...] = jnp.sum(diff * diff, axis=1, keepdims=True)
+    else:  # angular
+        rn = row / jnp.sqrt(jnp.sum(row * row, axis=1, keepdims=True))
+        qn = qv / jnp.sqrt(jnp.sum(qv * qv, axis=1, keepdims=True))
+        o_ref[...] = 1.0 - jnp.sum(rn * qn, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def gather_dist_pallas(
+    data: jax.Array,  # (n, d) float32
+    ids: jax.Array,  # (B, L) int32 (negatives treated as row 0; mask outside)
+    queries: jax.Array,  # (B, d) float32
+    *,
+    metric: str = "euclidean",
+    interpret: bool = True,
+) -> jax.Array:
+    B, L = ids.shape
+    n, d = data.shape
+    ids_c = jnp.maximum(ids, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_gather_l2_kernel, metric=metric),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, L),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda b, l, ids_ref: (ids_ref[b, l], 0)),
+                pl.BlockSpec((1, d), lambda b, l, ids_ref: (b, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda b, l, ids_ref: (b, l)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, L), jnp.float32),
+        interpret=interpret,
+    )(ids_c, data.astype(jnp.float32), queries.astype(jnp.float32))
+    return out

@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for candidate verification."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret
+from .gather_l2 import gather_dist_pallas
+from .ref import gather_dist_ref
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "use_pallas"))
+def gather_dist(data, ids, queries, *, metric: str = "euclidean", use_pallas: bool = True):
+    """Distances of candidates `ids` to `queries`; masked (id < 0) slots -> +inf."""
+    if use_pallas:
+        d = gather_dist_pallas(
+            data, ids, queries, metric=metric, interpret=default_interpret()
+        )
+    else:
+        d = gather_dist_ref(data, ids, queries, metric=metric)
+    return jnp.where(ids >= 0, d, jnp.inf)

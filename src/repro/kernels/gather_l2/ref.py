@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for gather + distance candidate verification."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def gather_dist_ref(
+    data: jax.Array,  # (n, d)
+    ids: jax.Array,  # (B, L) int32 (clipped to >= 0 by caller)
+    queries: jax.Array,  # (B, d)
+    *,
+    metric: str = "euclidean",
+) -> jax.Array:
+    cand = data[jnp.maximum(ids, 0)]  # (B, L, d)
+    if metric == "euclidean":
+        return jnp.sum((cand - queries[:, None, :]) ** 2, axis=-1)
+    if metric == "angular":
+        cn = cand / jnp.linalg.norm(cand, axis=-1, keepdims=True)
+        qn = queries / jnp.linalg.norm(queries, axis=-1, keepdims=True)
+        return 1.0 - jnp.sum(cn * qn[:, None, :], axis=-1)
+    raise ValueError(metric)

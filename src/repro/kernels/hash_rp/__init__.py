@@ -1,0 +1,2 @@
+"""hash_rp kernel package."""
+from .ops import *  # noqa: F401,F403

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for fused RP hashing."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from ..common import default_interpret
+from .hash_rp import hash_rp_pallas
+from .ref import hash_rp_ref
+
+
+@functools.partial(jax.jit, static_argnames=("w", "use_pallas"))
+def hash_rp(x, a, b, *, w: float, use_pallas: bool = True):
+    if use_pallas:
+        return hash_rp_pallas(x, a, b, w=w, interpret=default_interpret())
+    return hash_rp_ref(x, a, b, w=w)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for fused random-projection hashing."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("w",))
+def hash_rp_ref(x: jax.Array, a: jax.Array, b: jax.Array, *, w: float) -> jax.Array:
+    """floor((x @ a + b) / w) -> int32.  x: (n, d), a: (d, m), b: (m,)."""
+    proj = x.astype(jnp.float32) @ a.astype(jnp.float32) + b
+    return jnp.floor(proj / w).astype(jnp.int32)

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for fused cross-polytope hashing."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from ..common import default_interpret
+from .hash_xp import hash_xp_pallas
+from .ref import hash_xp_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def hash_xp(x, rot, *, use_pallas: bool = True):
+    if use_pallas:
+        return hash_xp_pallas(x, rot, interpret=default_interpret())
+    return hash_xp_ref(x, rot)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for fused cross-polytope hashing (gaussian rotation)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def hash_xp_ref(x: jax.Array, rot: jax.Array) -> jax.Array:
+    """x: (n, d), rot: (m, d, dr) -> (n, m) int32 hash in [0, 2*dr).
+
+    h = argmax over the 2*dr signed basis directions of the rotated vector
+    (equivalently argmax of concat([y, -y]))."""
+    y = jnp.einsum("nd,mde->nme", x.astype(jnp.float32), rot.astype(jnp.float32))
+    both = jnp.concatenate([y, -y], axis=-1)  # (n, m, 2*dr)
+    return jnp.argmax(both, axis=-1).astype(jnp.int32)

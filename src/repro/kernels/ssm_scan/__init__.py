@@ -1,0 +1,2 @@
+"""ssm_scan kernel package."""
+from .ops import ssm_scan  # noqa: F401

@@ -1,0 +1,51 @@
+"""Jit'd public wrapper: batched, long-sequence fused selective scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret
+from .ref import ssm_scan_ref
+from .ssm_scan import ssm_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "seq_chunk", "block_d"))
+def ssm_scan(
+    dt: jax.Array,  # (B, L, D)
+    x: jax.Array,  # (B, L, D)
+    Bc: jax.Array,  # (B, L, N)
+    Cc: jax.Array,  # (B, L, N)
+    A: jax.Array,  # (D, N)
+    h0: jax.Array,  # (B, D, N)
+    *,
+    use_pallas: bool = True,
+    seq_chunk: int = 2048,
+    block_d: int = 512,
+):
+    """Selective scan over a batch; sequences longer than seq_chunk stream
+    through the kernel carrying h (VMEM residency bounds the chunk)."""
+    B, L, D = dt.shape
+
+    def one(dt1, x1, b1, c1, h1):
+        fn = (
+            functools.partial(
+                ssm_scan_pallas, block_d=block_d, interpret=default_interpret()
+            )
+            if use_pallas
+            else lambda *a: ssm_scan_ref(*a)
+        )
+        n_chunks = (L + seq_chunk - 1) // seq_chunk
+        if n_chunks == 1:
+            return fn(dt1, x1, b1, c1, A, h1)
+        ys = []
+        h = h1
+        for ci in range(n_chunks):  # static python loop (L static)
+            lo = ci * seq_chunk
+            hi = min(L, lo + seq_chunk)
+            y_c, h = fn(dt1[lo:hi], x1[lo:hi], b1[lo:hi], c1[lo:hi], A, h)
+            ys.append(y_c)
+        return jnp.concatenate(ys, axis=0), h
+
+    return jax.vmap(one)(dt, x, Bc, Cc, h0)

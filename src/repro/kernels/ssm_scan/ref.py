@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused selective-scan kernel."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.jit
+def ssm_scan_ref(dt, x, Bc, Cc, A, h0):
+    """Mamba-1 selective scan, one chunk.
+
+    dt, x: (L, D) fp32; Bc, Cc: (L, N) fp32; A: (D, N); h0: (D, N).
+    Returns (y (L, D), h_fin (D, N)) with
+      h_t = exp(dt_t A) * h_{t-1} + (dt_t x_t) B_t ;  y_t = h_t . C_t
+    """
+
+    def step(h, inp):
+        dt_t, x_t, B_t, C_t = inp
+        a = jnp.exp(dt_t[:, None] * A)
+        b = (dt_t * x_t)[:, None] * B_t[None, :]
+        h = a * h + b
+        return h, h @ C_t
+    h_fin, y = lax.scan(step, h0, (dt, x, Bc, Cc))
+    return y, h_fin

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: fused Mamba-1 selective scan.
+
+The §Perf floor analysis (EXPERIMENTS.md, falcon-mamba cell B) showed the
+pure-JAX scan is bound by the recurrence state h (D, N) round-tripping HBM
+every step.  This kernel holds h in a VMEM scratch across the whole time
+loop of a channel block -- the published Mamba-kernel design, adapted to
+TPU: grid over channel blocks (channels are the TP-sharded, embarrassingly
+parallel axis), sequential fori_loop over time inside the kernel, per-step
+work entirely on (bd, N) registers/VMEM tiles.
+
+VMEM working set per block: dt/x (L, bd), B/C (L, N), h (bd, N), y (L, bd)
+~= (2 L bd + 2 L N + bd N + L bd) * 4B; defaults bd=512, L<=2048, N<=16 stay
+well under VMEM.  Longer sequences chunk at the ops.py level, carrying h
+between chunks (exactly like repro.models.ssm streaming).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_scan_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, h0_ref, y_ref,
+                     hout_ref, h_scr, *, L: int):
+    h_scr[...] = h0_ref[...]  # (bd, N) fp32, lives in VMEM for all L steps
+    A = a_ref[...]  # (bd, N)
+
+    def step(t, _):
+        dt_t = dt_ref[t, :]  # (bd,)
+        x_t = x_ref[t, :]
+        B_t = b_ref[t, :]  # (N,)
+        C_t = c_ref[t, :]
+        a = jnp.exp(dt_t[:, None] * A)
+        b = (dt_t * x_t)[:, None] * B_t[None, :]
+        h = a * h_scr[...] + b
+        h_scr[...] = h
+        y_ref[t, :] = h @ C_t
+        return ()
+
+    jax.lax.fori_loop(0, L, step, ())
+    hout_ref[...] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ssm_scan_pallas(
+    dt: jax.Array,  # (L, D) fp32
+    x: jax.Array,  # (L, D) fp32
+    Bc: jax.Array,  # (L, N) fp32
+    Cc: jax.Array,  # (L, N) fp32
+    A: jax.Array,  # (D, N) fp32
+    h0: jax.Array,  # (D, N) fp32
+    *,
+    block_d: int = 512,
+    interpret: bool = True,
+):
+    L, D = dt.shape
+    N = Bc.shape[1]
+    bd = min(block_d, D)
+    D_pad = (D + bd - 1) // bd * bd
+    if D_pad != D:
+        pad = ((0, 0), (0, D_pad - D))
+        dt = jnp.pad(dt, pad)
+        x = jnp.pad(x, pad)
+        A = jnp.pad(A, ((0, D_pad - D), (0, 0)))
+        h0 = jnp.pad(h0, ((0, D_pad - D), (0, 0)))
+    grid = (D_pad // bd,)
+    y, h_fin = pl.pallas_call(
+        functools.partial(_ssm_scan_kernel, L=L),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L, bd), lambda i: (0, i)),
+            pl.BlockSpec((L, bd), lambda i: (0, i)),
+            pl.BlockSpec((L, N), lambda i: (0, 0)),
+            pl.BlockSpec((L, N), lambda i: (0, 0)),
+            pl.BlockSpec((bd, N), lambda i: (i, 0)),
+            pl.BlockSpec((bd, N), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, bd), lambda i: (0, i)),
+            pl.BlockSpec((bd, N), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, D_pad), jnp.float32),
+            jax.ShapeDtypeStruct((D_pad, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(
+        dt.astype(jnp.float32), x.astype(jnp.float32),
+        Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+        A.astype(jnp.float32), h0.astype(jnp.float32),
+    )
+    return y[:, :D], h_fin[:D]

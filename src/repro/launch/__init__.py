@@ -1,0 +1,1 @@
+"""Launch: mesh, dryrun, roofline, train/serve drivers."""

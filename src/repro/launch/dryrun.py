@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any other import (jax locks the device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell with ShapeDtypeStruct stand-ins (no allocation), print
+memory/cost analysis, and persist the roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, get_config, input_specs
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import batch_specs, cache_specs, state_specs, to_named
+from repro.models import api
+from repro.optim import cosine_schedule
+from repro.sharding import shard_ctx
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
+               opt_dtype: str = "float32", keep_hlo: bool = False,
+               overrides: dict | None = None, serve_params: str = "fsdp_f32",
+               hlo_out: str | None = None, microbatch: int = 0):
+    """Lower+compile one cell.  Returns a result dict (or a skip record).
+
+    overrides: ModelConfig field overrides (hillclimb variants).
+    serve_params: "fsdp_f32" (baseline: fp32 masters, ZeRO-sharded) or
+        "tp_bf16" (serving layout: bf16 weights, replicated over the DP axes
+        -- no per-token FSDP gathers).
+    """
+    import dataclasses
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    ok, why = cell_applicable(cfg, shape)
+    cell = SHAPES[shape]
+    base = {
+        "arch": arch, "shape": shape,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "kind": cell.kind,
+    }
+    if not ok:
+        return {**base, "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.devices.shape)
+    t0 = time.time()
+
+    with shard_ctx(mesh):
+        if cell.kind == "train":
+            od = jnp.bfloat16 if opt_dtype == "bfloat16" else jnp.float32
+            state_sds = jax.eval_shape(
+                lambda k: init_train_state(k, cfg, opt_dtype=od), jax.random.key(0)
+            )
+            batch_sds = input_specs(cfg, shape)
+            st_specs = state_specs(state_sds, mesh)
+            b_specs = batch_specs(batch_sds, mesh)
+            lr_fn = lambda step: cosine_schedule(
+                step, peak_lr=3e-4, warmup=2000, total=100_000
+            )
+            step_fn = make_train_step(cfg, lr_fn, microbatch=microbatch)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(to_named(st_specs, mesh), to_named(b_specs, mesh)),
+                out_shardings=(to_named(st_specs, mesh), None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_sds, batch_sds)
+        elif cell.kind == "prefill":
+            from repro.sharding import param_specs as _ps
+            from repro.sharding.specs import LOGICAL_RULES
+
+            sp_dtype = jnp.bfloat16 if serve_params == "tp_bf16" else jnp.float32
+            sp_rules = dict(LOGICAL_RULES)
+            if serve_params == "tp_bf16":
+                sp_rules["fsdp"] = ()  # replicate over DP axes for serving
+            params_sds = jax.eval_shape(
+                lambda k: api.init_model(k, cfg, dtype=sp_dtype), jax.random.key(0)
+            )
+            p_specs = to_named(_ps(params_sds, mesh, sp_rules), mesh)
+            batch_sds = input_specs(cfg, shape)
+            b_specs = to_named(batch_specs(batch_sds, mesh), mesh)
+            max_len = cell.seq_len + (cfg.n_patches if cfg.vlm else 0) + 64
+            fn = lambda p, b: api.prefill(p, b, cfg, max_len)
+            jitted = jax.jit(fn, in_shardings=(p_specs, b_specs))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            from repro.sharding import param_specs as _ps
+            from repro.sharding.specs import LOGICAL_RULES
+
+            sp_dtype = jnp.bfloat16 if serve_params == "tp_bf16" else jnp.float32
+            sp_rules = dict(LOGICAL_RULES)
+            if serve_params == "tp_bf16":
+                sp_rules["fsdp"] = ()
+            params_sds = jax.eval_shape(
+                lambda k: api.init_model(k, cfg, dtype=sp_dtype), jax.random.key(0)
+            )
+            p_specs = to_named(_ps(params_sds, mesh, sp_rules), mesh)
+            B = cell.global_batch
+            max_len = cell.seq_len + 64
+            if cfg.enc_dec:
+                pre_batch = input_specs(cfg, "prefill_32k")
+                pre_batch = {
+                    "frames": jax.ShapeDtypeStruct(
+                        (B, cfg.n_audio_frames, cfg.d_model), jnp.float32
+                    ),
+                    "tokens": jax.ShapeDtypeStruct((B, cell.seq_len), jnp.int32),
+                }
+                _, caches_sds = jax.eval_shape(
+                    lambda p, b: api.prefill(p, b, cfg, max_len), params_sds, pre_batch
+                )
+            else:
+                caches_sds = jax.eval_shape(
+                    lambda: api.init_caches(cfg, B, max_len)
+                )
+            c_specs = to_named(cache_specs(caches_sds, mesh), mesh)
+            token_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            t_specs = to_named(batch_specs(token_sds, mesh), mesh)
+            fn = lambda p, tok, c: api.decode_step(p, tok, c, cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_specs, t_specs, c_specs),
+                out_shardings=(None, c_specs),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_sds, token_sds, caches_sds)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # ---- analyses ----------------------------------------------------------
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes"):
+        mem_info[k] = getattr(mem, k, None)
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    parsed = rf.analyze_hlo_text(hlo_text)
+    terms = rf.roofline_terms(parsed, n_chips)
+    mf = rf.model_flops(cfg, cell)
+    mf_per_dev = mf / n_chips
+    useful = mf_per_dev / max(parsed["hlo_flops_per_device"], 1e-30)
+    res = {
+        **base,
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_info,
+        "cost_analysis_raw": {
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        **{k: parsed[k] for k in (
+            "hlo_flops_per_device", "hlo_bytes_per_device",
+            "collective_bytes_per_device", "collective_by_kind",
+        )},
+        "roofline": terms,
+        "model_flops_total": mf,
+        "model_flops_per_device": mf_per_dev,
+        "useful_flops_ratio": useful,
+        "hlo_size_chars": len(hlo_text),
+    }
+    if keep_hlo:
+        res["hlo_head"] = hlo_text[:4000]
+    if hlo_out:
+        Path(hlo_out).parent.mkdir(parents=True, exist_ok=True)
+        Path(hlo_out).write_text(hlo_text)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--opt-dtype", default="float32")
+    ap.add_argument("--serve-params", default="fsdp_f32",
+                    choices=["fsdp_f32", "tp_bf16"])
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig override, e.g. --set ssm_fused_chunks=True")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    out_path = Path(args.out) if args.out else None
+    if out_path:
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+    n_fail = 0
+    for arch, shape, mp in cells:
+        label = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+        overrides = {}
+        for kv in args.set:
+            k, v = kv.split("=", 1)
+            overrides[k] = {"True": True, "False": False}.get(v) if v in ("True", "False") else (
+                int(v) if v.isdigit() else float(v) if v.replace(".", "", 1).isdigit() else v
+            )
+        try:
+            res = lower_cell(arch, shape, multi_pod=mp, opt_dtype=args.opt_dtype,
+                             overrides=overrides, serve_params=args.serve_params,
+                             microbatch=args.microbatch)
+        except Exception as e:
+            traceback.print_exc()
+            res = {
+                "arch": arch, "shape": shape,
+                "mesh": "pod2x16x16" if mp else "16x16",
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+            }
+            n_fail += 1
+        if res.get("status") == "ok":
+            r = res["roofline"]
+            print(
+                f"[OK]   {label}: compile={res['compile_s']}s "
+                f"bottleneck={r['bottleneck']} "
+                f"terms(c/m/x)={r['compute_s']:.4f}/{r['memory_s']:.4f}/"
+                f"{r['collective_s']:.4f}s useful={res['useful_flops_ratio']:.2f}",
+                flush=True,
+            )
+            print("  memory_analysis:", res["memory_analysis"], flush=True)
+            print("  cost_analysis:", res["cost_analysis_raw"], flush=True)
+        elif res.get("status") == "skipped":
+            print(f"[SKIP] {label}: {res['reason']}", flush=True)
+        else:
+            print(f"[FAIL] {label}: {res.get('error')}", flush=True)
+        if out_path:
+            with open(out_path, "a") as f:
+                f.write(json.dumps(res) + "\n")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the 512-device fake platform is set up by dryrun.py ONLY).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the pod axis extends
+    the DP/FSDP axis set across the inter-pod DCI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} "
+            "(dryrun.py sets --xla_force_host_platform_device_count=512)"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over however many devices exist (tests)."""
+    import numpy as np
+
+    devices = jax.devices()[: n_data * n_model]
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(n_data, n_model), ("data", "model")
+    )

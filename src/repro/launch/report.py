@@ -1,0 +1,101 @@
+"""Aggregate dry-run JSONL results into the EXPERIMENTS.md roofline tables.
+
+Usage: PYTHONPATH=src python -m repro.launch.report results/*.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def load(paths) -> dict:
+    """Later files win per (arch, shape, mesh)."""
+    rows = {}
+    for p in paths:
+        for line in open(p):
+            r = json.loads(line)
+            rows[(r["arch"], r["shape"], r["mesh"])] = r
+    return rows
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def hbm_fit(r) -> str:
+    m = r.get("memory_analysis") or {}
+    tot = (m.get("argument_size_in_bytes") or 0) + (m.get("temp_size_in_bytes") or 0)
+    return f"{tot/2**30:.1f}GiB{'!' if tot > 16 * 2**30 else ''}"
+
+
+def table(rows: dict, mesh: str) -> str:
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "useful (6ND/HLO) | args+temp/dev |\n"
+        "|---|---|---|---|---|---|---|---|\n"
+    )
+    out = [hdr]
+    for (arch, shape, m), r in sorted(rows.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {arch} | {shape} | - | - | - | skipped | - | - |\n")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {arch} | {shape} | - | - | - | ERROR | - | - |\n")
+            continue
+        t = r["roofline"]
+        out.append(
+            f"| {arch} | {shape} | {t['compute_s']:.3f} | {t['memory_s']:.3f} | "
+            f"{t['collective_s']:.3f} | {t['bottleneck']} | "
+            f"{r['useful_flops_ratio']:.2f} | {hbm_fit(r)} |\n"
+        )
+    return "".join(out)
+
+
+def summary(rows: dict) -> dict:
+    ok = sum(1 for r in rows.values() if r["status"] == "ok")
+    skip = sum(1 for r in rows.values() if r["status"] == "skipped")
+    err = sum(1 for r in rows.values() if r["status"] not in ("ok", "skipped"))
+    return {"ok": ok, "skipped": skip, "error": err, "total": len(rows)}
+
+
+def interesting_cells(rows: dict, mesh: str = "16x16"):
+    """Rank baseline cells for hillclimbing: worst compute fraction, most
+    collective-bound, and MoE-representative."""
+    scored = []
+    for (arch, shape, m), r in rows.items():
+        if m != mesh or r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        scored.append(
+            {
+                "cell": (arch, shape),
+                "compute_fraction": t["compute_fraction_of_bound"],
+                "collective_s": t["collective_s"],
+                "bottleneck": t["bottleneck"],
+                "bound_s": t["roofline_bound_s"],
+            }
+        )
+    worst = sorted(scored, key=lambda s: s["compute_fraction"])[:8]
+    most_coll = sorted(scored, key=lambda s: -s["collective_s"])[:8]
+    return {"worst_compute_fraction": worst, "most_collective": most_coll}
+
+
+if __name__ == "__main__":
+    paths = sys.argv[1:] or ["results/dryrun_baseline.jsonl"]
+    rows = load(paths)
+    print("summary:", summary(rows))
+    for mesh in ("16x16", "pod2x16x16"):
+        print(f"\n## mesh {mesh}\n")
+        print(table(rows, mesh))
+    import pprint
+
+    pprint.pprint(interesting_cells(rows))

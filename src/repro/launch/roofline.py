@@ -1,0 +1,438 @@
+"""Roofline analysis from compiled HLO (DESIGN/EXPERIMENTS §Roofline).
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment constants).
+
+  compute term    = HLO_FLOPs / (chips x peak)
+  memory term     = HLO_bytes / (chips x HBM bw)
+  collective term = collective_bytes / (chips x link bw)
+
+IMPORTANT CAVEAT (measured, see EXPERIMENTS.md): ``compiled.cost_analysis()``
+counts a ``while`` body ONCE regardless of trip count -- with
+scan-over-layers the raw numbers undercount by ~n_layers.  This module
+therefore parses ``compiled.as_text()`` directly:
+
+  * per-computation FLOPs from ``dot`` ops (2 x out_elems x contraction),
+  * per-computation HBM-traffic proxy: operands + outputs of top-level ops
+    (post-fusion HLO: each op's inputs/outputs approximate HBM round-trips),
+  * collective bytes by kind with ring-algorithm conventions,
+  * ``while`` trip counts from the loop-condition constant, applied
+    recursively so nested scans (layers x kv-chunks) multiply correctly.
+
+All quantities are per-device (the HLO is the post-SPMD partitioned module).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+# ---- hardware constants (TPU v5e) -----------------------------------------
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~per-chip usable collective bw, 1 link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples by summing)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+    while_calls: list = field(default_factory=list)  # (body, cond, trips)
+    inline_calls: list = field(default_factory=list)  # fusions etc: flops only
+
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT )?%([\w\.\-]+) = ((?:\([^)]*\))|(?:\S+)) (\w+(?:-\w+)*)\((.*)$"
+)
+_CALLED_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# ops whose operands/outputs approximate HBM round-trips in post-fusion HLO
+_TRAFFIC_KINDS = frozenset(
+    "fusion custom-call copy transpose broadcast reduce sort scatter gather "
+    "dynamic-slice dynamic-update-slice add multiply concatenate convert "
+    "exponential tanh select iota compare divide subtract maximum minimum "
+    "pad slice rsqrt log floor dot convolution rng rng-bit-generator "
+    "reduce-window select-and-scatter clamp power negate abs sign "
+    "exponential-minus-one log-plus-one sqrt cosine sine and or not xor "
+    "shift-left shift-right-logical shift-right-arithmetic remainder "
+    "round-nearest-afz round-nearest-even stochastic-convert "
+    "all-gather all-reduce reduce-scatter all-to-all collective-permute".split()
+)
+_FREE_KINDS = frozenset(
+    "reshape bitcast get-tuple-element tuple parameter constant "
+    "after-all token partition-id replica-id".split()
+)
+
+
+def parse_hlo_module(text: str):
+    """Returns (computations: name -> list[op-line], entry_name,
+    symtab: value name -> type string)."""
+    comps: dict[str, list[str]] = {}
+    symtab: dict[str, str] = {}
+    entry = None
+    cur: list[str] | None = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if not s or s.lstrip().startswith("//"):
+            continue
+        if (s.startswith("%") or s.startswith("ENTRY")) and s.endswith("{"):
+            is_entry = s.startswith("ENTRY")
+            name = (s.split()[1] if is_entry else s.split()[0]).lstrip("%")
+            cur = []
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            cur.append(s)
+            m = _DEF_RE.match(s)
+            if m:
+                symtab[m.group(1)] = m.group(2)
+    return comps, entry, symtab
+
+
+def _operands(rest: str) -> list[str]:
+    """Operand value names (text inside the call parens, before attributes)."""
+    args = rest.split(")")[0]
+    return _OPERAND_NAME_RE.findall(args)
+
+
+def _dot_flops(type_str: str, rest: str, line: str, symtab) -> float:
+    out_elems = _shape_elems(type_str)
+    ops = _operands(rest)
+    contraction = 1
+    if ops and ops[0] in symtab:
+        lhs_dims = _shape_dims(symtab[ops[0]])
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        if m and m.group(1):
+            for d in m.group(1).split(","):
+                di = int(d)
+                contraction *= lhs_dims[di] if di < len(lhs_dims) else 1
+    return 2.0 * out_elems * contraction
+
+
+def _collective_bytes(kind: str, type_str: str, in_bytes: float) -> float:
+    """Ring wire-byte conventions per device: all-gather -> output bytes;
+    all-reduce -> 2x input (RS+AG); reduce-scatter/all-to-all/permute ->
+    input bytes."""
+    out_bytes = _shape_bytes(type_str)
+    if kind.startswith("all-gather"):
+        return float(out_bytes)
+    if kind.startswith("all-reduce"):
+        return float(2 * in_bytes)
+    return float(in_bytes)
+
+
+def _trip_count(cond_ops: list[str]) -> int:
+    consts = [
+        int(m.group(1))
+        for line in cond_ops
+        for m in [re.search(r"constant\((\d+)\)", line)]
+        if m
+    ]
+    return max(consts) if consts else 1
+
+
+def analyze_computations(comps: dict[str, list[str]], symtab: dict[str, str]):
+    stats: dict[str, CompStats] = {}
+    for name, ops in comps.items():
+        st = CompStats()
+        for line in ops:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            _, type_str, kind, rest = m.groups()
+            base_kind = kind.replace("-start", "").replace("-done", "")
+            opnames = _operands(rest)
+            in_bytes = sum(_shape_bytes(symtab.get(o, "")) for o in opnames)
+            if base_kind == "dot":
+                st.flops += _dot_flops(type_str, rest, line, symtab)
+            elif base_kind == "convolution":
+                st.flops += 2.0 * _shape_elems(type_str)
+            if base_kind in _FREE_KINDS:
+                pass
+            elif base_kind == "dynamic-update-slice":
+                # in-place aliased update: traffic = 2x the update operand
+                upd = (
+                    _shape_bytes(symtab.get(opnames[1], "")) if len(opnames) > 1 else 0
+                )
+                st.bytes += 2.0 * upd
+            elif base_kind == "scatter":
+                upd = (
+                    _shape_bytes(symtab.get(opnames[-1], "")) if opnames else 0
+                )
+                st.bytes += 2.0 * upd
+            elif base_kind in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced/gathered region, not the operand
+                st.bytes += 2.0 * _shape_bytes(type_str)
+            elif base_kind == "while":
+                pass  # body/cond accounted via the call graph
+            elif base_kind == "fusion":
+                # XLA names fusions after their "hero" op; slicing/updating
+                # heroes touch only the slice, with the big buffer aliased
+                # in-place (loop-carried scan state).  Charging the full
+                # buffer per step overstates HBM traffic by the trip count.
+                out_b = _shape_bytes(type_str)
+                ops_b = [_shape_bytes(symtab.get(o, "")) for o in opnames]
+                tot, mx = sum(ops_b), (max(ops_b) if ops_b else 0)
+                name_l = m.group(1)
+                is_input_fusion = "kind=kInput" in line  # true reduction
+                if "dynamic-update-slice" in name_l or "scatter" in name_l:
+                    if mx >= out_b:
+                        # loop-carried buffer update: the aliased buffer and
+                        # any same-size operands are read/written only at the
+                        # slice; slice size ~ the largest sub-buffer operand
+                        small = [o for o in ops_b if o < out_b]
+                        n_big = sum(1 for o in ops_b if o >= out_b)
+                        slice_proxy = max(small) if small else out_b // 64
+                        st.bytes += 2.0 * sum(small) + 2.0 * n_big * slice_proxy
+                    else:
+                        st.bytes += out_b + tot
+                elif "dynamic-slice" in name_l or "gather" in name_l:
+                    st.bytes += 2.0 * out_b + sum(min(o, out_b) for o in ops_b[1:])
+                elif is_input_fusion:
+                    st.bytes += out_b + tot  # reductions read full operands
+                else:
+                    # kLoop/kOutput: ~elementwise per output element; operands
+                    # far larger than the output are internally sliced
+                    st.bytes += out_b + sum(min(o, 2 * out_b) for o in ops_b)
+            elif base_kind in _TRAFFIC_KINDS:
+                st.bytes += _shape_bytes(type_str) + in_bytes
+            if any(base_kind == c or base_kind.startswith(c) for c in _COLLECTIVES):
+                cb = _collective_bytes(base_kind, type_str, in_bytes)
+                st.coll_bytes += cb
+                st.coll_by_kind[base_kind] = st.coll_by_kind.get(base_kind, 0.0) + cb
+            if kind == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", line)
+                cond = re.search(r"condition=%?([\w\.\-]+)", line)
+                if body and cond:
+                    trips = _trip_count(comps.get(cond.group(1), []))
+                    st.while_calls.append((body.group(1), cond.group(1), trips))
+            elif base_kind in ("fusion", "call", "reduce", "sort", "scatter",
+                               "map", "conditional", "custom-call", "all-reduce",
+                               "reduce-scatter", "reduce-window",
+                               "select-and-scatter"):
+                for cal in _CALLED_RE.findall(line):
+                    st.inline_calls.append(cal)
+        stats[name] = st
+    return stats
+
+
+def rollup(stats: dict[str, CompStats], entry: str):
+    """Totals for the entry, multiplying while bodies by trip counts.
+    Inline-called computations (fusion bodies, reduce lambdas) contribute
+    FLOPs (a dot can live inside a fusion) but NOT bytes -- their operands
+    stay in registers/VMEM."""
+    memo: dict[str, tuple] = {}
+
+    def visit(name: str, depth=0) -> tuple:
+        if name in memo:
+            return memo[name]
+        if name not in stats or depth > 128:
+            return (0.0, 0.0, 0.0, {})
+        memo[name] = (0.0, 0.0, 0.0, {})  # cycle guard
+        st = stats[name]
+        f, b, c = st.flops, st.bytes, st.coll_bytes
+        kinds = dict(st.coll_by_kind)
+        for cal in st.inline_calls:
+            sf, _, sc, sk = visit(cal, depth + 1)
+            f += sf
+            c += sc
+            for k, v in sk.items():
+                kinds[k] = kinds.get(k, 0.0) + v
+        for body, cond, trips in st.while_calls:
+            for sub in (body, cond):
+                sf, sb, sc, sk = visit(sub, depth + 1)
+                f += trips * sf
+                b += trips * sb
+                c += trips * sc
+                for k, v in sk.items():
+                    kinds[k] = kinds.get(k, 0.0) + trips * v
+        memo[name] = (f, b, c, kinds)
+        return memo[name]
+
+    return visit(entry)
+
+
+def breakdown(text: str, top: int = 12) -> list[dict]:
+    """Top computations by *rolled-up* byte contribution (bytes x the product
+    of trip counts on the path from entry) -- the hillclimb profiler."""
+    comps, entry, symtab = parse_hlo_module(text)
+    stats = analyze_computations(comps, symtab)
+    # effective multiplier of each computation from the entry
+    mult: dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        st = stats.get(name)
+        if st is None:
+            continue
+        for body, cond, trips in st.while_calls:
+            for sub in (body, cond):
+                mult[sub] = mult.get(sub, 0.0) + mult[name] * trips
+                if sub not in seen:
+                    seen.add(sub)
+                    order.append(sub)
+        for cal in st.inline_calls:
+            mult[cal] = mult.get(cal, 0.0) + mult[name]
+            if cal not in seen:
+                seen.add(cal)
+                order.append(cal)
+    rows = []
+    for name, m in mult.items():
+        st = stats.get(name)
+        if st is None:
+            continue
+        rows.append(
+            {
+                "computation": name,
+                "multiplier": m,
+                "local_bytes": st.bytes,
+                "effective_bytes": st.bytes * m,
+                "local_flops": st.flops,
+                "effective_flops": st.flops * m,
+                "effective_coll": st.coll_bytes * m,
+            }
+        )
+    rows.sort(key=lambda r: -r["effective_bytes"])
+    return rows[:top]
+
+
+def top_ops_by_bytes(text: str, comp_name: str, top: int = 15):
+    """Largest individual ops (by operands+output bytes) in one computation."""
+    comps, entry, symtab = parse_hlo_module(text)
+    rows = []
+    for line in comps.get(comp_name, []):
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, kind, rest = m.groups()
+        b = _shape_bytes(type_str) + sum(
+            _shape_bytes(symtab.get(o, "")) for o in _operands(rest)
+        )
+        rows.append((b, kind, name, type_str[:48]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def analyze_hlo_text(text: str) -> dict:
+    comps, entry, symtab = parse_hlo_module(text)
+    stats = analyze_computations(comps, symtab)
+    if entry is None:
+        entry = max(stats, key=lambda n: stats[n].flops, default=None)
+    f, b, c, kinds = rollup(stats, entry)
+    return {
+        "hlo_flops_per_device": f,
+        "hlo_bytes_per_device": b,
+        "collective_bytes_per_device": c,
+        "collective_by_kind": kinds,
+        "n_computations": len(comps),
+    }
+
+
+def roofline_terms(parsed: dict, n_chips: int) -> dict:
+    """Seconds per step per the three-term model (per-device quantities)."""
+    f = parsed["hlo_flops_per_device"]
+    b = parsed["hlo_bytes_per_device"]
+    c = parsed["collective_bytes_per_device"]
+    t_c = f / PEAK_FLOPS
+    t_m = b / HBM_BW
+    t_x = c / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "bottleneck": dom,
+        "roofline_bound_s": max(t_c, t_m, t_x),
+        "compute_fraction_of_bound": t_c / max(t_c, t_m, t_x, 1e-30),
+    }
+
+
+def model_flops(cfg, shape_cell, n_tokens: int | None = None) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE), D = tokens processed.
+    For decode cells D = global_batch (one token each); attention-over-cache
+    FLOPs are excluded by convention (they are counted in HLO_FLOPs)."""
+    import jax
+    import math as _math
+
+    from repro.models import api
+
+    params = jax.eval_shape(lambda k: api.init_model(k, cfg), jax.random.key(0))
+    n_params = sum(_math.prod(x.shape) for x in jax.tree.leaves(params))
+    if cfg.n_experts:
+        # active = total - (inactive experts' weights)
+        leaves = jax.tree_util.tree_leaves_with_path(params)
+        expert_params = sum(
+            _math.prod(l.shape)
+            for p, l in leaves
+            if any(getattr(k, "key", "") in ("e_gate", "e_up", "e_down") for k in p)
+        )
+        active_frac = cfg.moe_top_k / cfg.n_experts
+        n_active = n_params - expert_params * (1 - active_frac)
+    else:
+        n_active = n_params
+    if n_tokens is None:
+        if shape_cell.kind == "train":
+            n_tokens = shape_cell.global_batch * shape_cell.seq_len
+        elif shape_cell.kind == "prefill":
+            n_tokens = shape_cell.global_batch * shape_cell.seq_len
+        else:
+            n_tokens = shape_cell.global_batch  # one token per sequence
+    mult = 6 if shape_cell.kind == "train" else 2  # fwd+bwd vs fwd
+    return float(mult * n_active * n_tokens)

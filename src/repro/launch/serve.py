@@ -1,0 +1,74 @@
+"""Serving launcher: backbone + LCCS-LSH retrieval over a corpus.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
+        --corpus 512 --requests 128 [--ckpt-dir /tmp/run1]
+Loads trained weights from --ckpt-dir when present (the train launcher's
+output), otherwise serves from random init (layout/perf testing).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCHS
+from repro.data.synthetic import lm_token_batches
+from repro.models import api
+from repro.serve import RetrievalEngine
+from repro.train.step import init_train_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--corpus", type=int, default=512)
+    ap.add_argument("--requests", type=int, default=128)
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--lam", type=int, default=64)
+    ap.add_argument("--probes", type=int, default=1)
+    ap.add_argument("--m", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.smoke:
+        cfg = cfg.smoke()
+    params = api.init_model(jax.random.key(0), cfg)
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir)
+        if mgr.latest_step() is not None:
+            like = init_train_state(jax.random.key(0), cfg)
+            state, meta = mgr.restore(like)
+            params = state.params
+            print(f"[launch.serve] restored step {meta['step']} from {args.ckpt_dir}")
+
+    engine = RetrievalEngine(cfg, params, m=args.m, metric="angular",
+                             max_batch=args.max_batch)
+    gen = lm_token_batches(vocab=cfg.vocab, seed=0)
+    corpus, _ = gen(0, args.corpus, 32)
+    t0 = time.time()
+    engine.build_index(corpus)
+    print(f"[launch.serve] indexed {args.corpus} docs in {time.time()-t0:.1f}s "
+          f"({engine.index.index_bytes()/1e6:.2f} MB)")
+
+    rng = np.random.default_rng(1)
+    picks = rng.integers(0, args.corpus, args.requests)
+    results = engine.serve_stream(
+        [corpus[i] for i in picks], k=args.k, lam=args.lam, probes=args.probes
+    )
+    hits = sum(int(picks[i] in ids) for i, (ids, _) in enumerate(results))
+    s = engine.stats
+    print(
+        f"[launch.serve] {s.requests} requests / {s.batches} batches; "
+        f"embed {s.embed_s:.2f}s search {s.search_s:.2f}s; "
+        f"self-retrieval {hits}/{args.requests}"
+    )
+
+
+if __name__ == "__main__":
+    main()

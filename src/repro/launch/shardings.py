@@ -1,0 +1,111 @@
+"""PartitionSpecs for train states, batches, and serving caches."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding import param_specs
+from repro.sharding.specs import LOGICAL_RULES, _resolve
+
+
+def _bd(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _model(mesh: Mesh):
+    return "model" if "model" in mesh.axis_names else None
+
+
+def _bd_size(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def batch_specs(batch_sds, mesh: Mesh):
+    """Inputs: leading batch dim over (pod, data) when divisible (long_500k
+    has global_batch=1 -- replicated); everything else replicated (sequence
+    sharding is introduced by in-model constraints)."""
+    bd = _bd(mesh)
+    n_bd = _bd_size(mesh)
+
+    def spec(x):
+        lead = bd if (x.ndim >= 1 and x.shape[0] % n_bd == 0) else None
+        return P(lead, *([None] * (x.ndim - 1)))
+
+    return jax.tree.map(spec, batch_sds)
+
+
+def state_specs(state_sds, mesh: Mesh):
+    """TrainState: params + both Adam moments use the parameter rules; the
+    step counter is replicated."""
+
+    def one_tree(t):
+        return param_specs(t, mesh)
+
+    from repro.train.step import TrainState
+    from repro.optim import AdamWState
+
+    return TrainState(
+        params=one_tree(state_sds.params),
+        opt=AdamWState(
+            m=one_tree(state_sds.opt.m),
+            v=one_tree(state_sds.opt.v),
+            step=P(),
+        ),
+    )
+
+
+def cache_specs(cache_sds, mesh: Mesh):
+    """Serving caches: batch over (pod, data); KV sequence / SSM channels over
+    model (leaf-name based; see DESIGN.md §5)."""
+    bd = _bd(mesh)
+    md = _model(mesh)
+    n_bd = _bd_size(mesh)
+
+    def spec(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "name"):  # NamedTuple field
+                name = p.name
+                break
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        nd = leaf.ndim
+
+        def b(batch_dim_size):  # replicate batch when not divisible (B=1)
+            return bd if batch_dim_size % n_bd == 0 else None
+
+        if name in ("k", "v") and nd == 5:  # (repeats, B, S, H, dh): shard S
+            return P(None, b(leaf.shape[1]), md, None, None)
+        if name in ("k", "v") and nd == 4:
+            return P(b(leaf.shape[0]), md, None, None)
+        if name in ("ck", "cv"):  # whisper cross-KV: (L, B, S_enc, H, dh)
+            return P(None, b(leaf.shape[1]), None, None, None)
+        if name == "conv_tail" and nd == 4:  # (repeats, B, k-1, C)
+            return P(None, b(leaf.shape[1]), None, md)
+        if name == "conv_tail" and nd == 3:
+            return P(b(leaf.shape[0]), None, md)
+        if name == "state":  # m1 (R, B, Di, N) | m2 (R, B, H, N, hd)
+            if nd == 4:
+                return P(None, b(leaf.shape[1]), md, None)
+            if nd == 5:
+                return P(None, b(leaf.shape[1]), md, None, None)
+            if nd == 3:
+                return P(b(leaf.shape[0]), md, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_sds)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,75 @@
+"""Training launcher: config -> mesh -> data -> fault-tolerant loop.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \
+        --steps 100 --ckpt-dir /tmp/run1
+Re-running the same command after an interruption resumes from the latest
+checkpoint.  On real multi-host TPU the same entrypoint runs under
+`jax.distributed.initialize()`; on this CPU container use --smoke (reduced
+config, 1 device).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS
+from repro.data import DataPipeline, lm_token_batches
+from repro.data.dedup import NearDupFilter
+from repro.sharding import shard_ctx
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--total-steps", type=int, default=0)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--peak-lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--dedup", action="store_true",
+                    help="enable the LCCS-LSH near-dup data filter")
+    ap.add_argument("--mesh", default=None,
+                    help="'DxM' data x model mesh (needs that many devices)")
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.smoke:
+        cfg = cfg.smoke()
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_debug_mesh
+
+        d, m = (int(v) for v in args.mesh.split("x"))
+        mesh = make_debug_mesh(d, m)
+    n_shards = 1  # single-host container; multi-host shards by process index
+    data = DataPipeline(
+        lm_token_batches(vocab=cfg.vocab, seed=0),
+        global_batch=args.global_batch,
+        seq_len=args.seq_len,
+        n_shards=n_shards,
+        dedup=NearDupFilter(threshold=30) if args.dedup else None,
+    )
+    tcfg = TrainerConfig(
+        steps=args.steps, total_steps=args.total_steps,
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+        peak_lr=args.peak_lr, microbatch=args.microbatch,
+    )
+    trainer = Trainer(cfg, data, tcfg)
+    with shard_ctx(mesh):
+        out = trainer.run()
+    print(
+        f"[launch.train] {args.arch}: step={out['final_step']} "
+        f"loss={out['final_loss']} wall={out['wall_s']:.1f}s "
+        f"preempted={out['preempted']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model substrate for the assigned architectures."""
+from . import api, attention, blocks, common, ffn, lm, moe, ssm, vlm, whisper
+
+__all__ = [
+    "api", "attention", "blocks", "common", "ffn", "lm", "moe", "ssm",
+    "vlm", "whisper",
+]

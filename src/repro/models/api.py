@@ -1,0 +1,49 @@
+"""Unified model API dispatching decoder-LM / VLM / encoder-decoder."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import lm, whisper
+
+
+def init_model(key, cfg, dtype=jnp.float32):
+    if cfg.enc_dec:
+        return whisper.init_whisper(key, cfg, dtype)
+    return lm.init_lm(key, cfg, dtype)
+
+
+def loss_fn(params, batch, cfg):
+    if cfg.enc_dec:
+        return whisper.loss_fn(params, batch, cfg)
+    return lm.loss_fn(params, batch, cfg)
+
+
+def prefill(params, batch, cfg, max_len: int):
+    if cfg.enc_dec:
+        return whisper.prefill(params, batch, cfg, max_len)
+    if cfg.vlm:
+        from .vlm import splice_patches
+
+        embeds, positions = splice_patches(cfg, params, batch)
+        return lm.prefill(params, batch["tokens"], cfg, max_len,
+                          positions=positions, inputs_embeds=embeds)
+    return lm.prefill(params, batch["tokens"], cfg, max_len)
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    if cfg.enc_dec:
+        # built by whisper.prefill (cross-KV depends on the audio); decode
+        # dry-runs construct shape structs via jax.eval_shape on prefill.
+        raise NotImplementedError("whisper caches come from prefill")
+    return lm.init_caches(cfg, batch, max_len)
+
+
+def decode_step(params, token, caches, cfg):
+    if cfg.enc_dec:
+        return whisper.decode_step(params, token, caches, cfg)
+    return lm.decode_step(params, token, caches, cfg)
+
+
+def param_count(params) -> int:
+    return lm.param_count(params)

@@ -1,0 +1,251 @@
+"""Attention substrate: GQA/MQA projections, chunked-flash (pure JAX, lowers
+on any backend for the dry-run), sliding windows, logit soft-capping,
+RoPE/M-RoPE, KV-cache prefill/decode.
+
+Sharding (DESIGN.md §5): attention activations are *sequence-sharded* over
+the model axis (divisibility-free w.r.t. head counts); K/V are all-gathered
+per layer by GSPMD from the constraints.  Decode caches are sharded over the
+model axis by sequence (distributed flash-decode falls out of the softmax
+reduction over the sharded axis).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding import with_logical_constraint as wlc
+from .common import apply_mrope, apply_rope, dense_init
+
+_NEG = -2.0e38
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    window: int = 0  # 0 = global
+    softcap: float = 0.0
+    rope_theta: float = 10000.0
+    mrope: bool = False
+    causal: bool = True
+
+
+def init_attn(key, cfg: AttnConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    qd, kvd = cfg.n_heads * cfg.head_dim, cfg.n_kv * cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, qd), dtype=dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, kvd), dtype=dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, kvd), dtype=dtype),
+        "wo": dense_init(ks[3], (qd, cfg.d_model), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: AttnConfig, positions):
+    B, S, _ = x.shape
+    q = x @ p["wq"] + (p.get("bq", 0.0))
+    k = x @ p["wk"] + (p.get("bk", 0.0))
+    v = x @ p["wv"] + (p.get("bv", 0.0))
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv, cfg.head_dim)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    elif cfg.rope_theta > 0:
+        pos1 = positions if positions.ndim == 2 else positions[..., 0]
+        q = apply_rope(q, pos1, cfg.rope_theta)
+        k = apply_rope(k, pos1, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, Hq, dh)
+    k: jax.Array,  # (B, Skv, Hkv, dh)
+    v: jax.Array,  # (B, Skv, Hkv, dh)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,  # global position of q[0] relative to k[0]
+    kv_chunk: int = 1024,
+    bf16_probs: bool = False,  # §Perf: bf16 P tile between exp and PV matmul
+) -> jax.Array:
+    """Flash-style online-softmax attention, lax.scan over KV chunks.
+
+    Peak memory is O(Sq * kv_chunk) per head instead of O(Sq * Skv); this is
+    the path the dry-run lowers (pure jnp -> compiles on CPU/TPU alike).
+    """
+    B, Sq, Hq, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    groups = Hq // Hkv
+    kv_chunk = min(kv_chunk, Skv)
+    n_chunks = (Skv + kv_chunk - 1) // kv_chunk
+    pad = n_chunks * kv_chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, kv_chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+
+    scale = 1.0 / (dh ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    q_pos = jnp.arange(Sq, dtype=jnp.int32) + q_offset
+
+    def step(carry, inp):
+        acc, m_run, l_run = carry
+        ci, k_blk, v_blk = inp
+        # scores: (B, Hkv, groups, Sq, kv_chunk)
+        qg = qf.reshape(B, Sq, Hkv, groups, dh)
+        s = jnp.einsum("bshgd,bthd->bhgst", qg, k_blk.astype(jnp.float32))
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = ci * kv_chunk + jnp.arange(kv_chunk, dtype=jnp.int32)
+        mask = k_pos[None, :] < Skv  # padding
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        if bf16_probs:
+            # the P tile round-trips HBM between the exp and the PV matmul in
+            # the scan-materialised flash; bf16 halves that traffic while the
+            # softmax statistics (m, l) and accumulator stay fp32
+            pv = jnp.einsum("bhgst,bthd->bhgsd", p.astype(jnp.bfloat16),
+                            v_blk.astype(jnp.bfloat16)).astype(jnp.float32)
+        else:
+            pv = jnp.einsum("bhgst,bthd->bhgsd", p, v_blk.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Hkv, groups, Sq, dh), jnp.float32)
+    m0 = jnp.full((B, Hkv, groups, Sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, groups, Sq), jnp.float32)
+    (acc, m_run, l_run), _ = lax.scan(
+        step, (acc0, m0, l0), (jnp.arange(n_chunks), kc, vc)
+    )
+    out = acc / jnp.maximum(l_run[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, dh)
+    return out.astype(q.dtype)
+
+
+def attention_block(p, x, cfg: AttnConfig, positions, kv_chunk: int = 1024,
+                    bf16_probs: bool = False):
+    """Full-sequence attention (training / prefill).  x: (B, S, D)."""
+    x = wlc(x, "batch", "seq", None)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    q = wlc(q, "batch", "seq", None, None)
+    # K/V replicated across the model axis (all-gather inserted by GSPMD)
+    k = wlc(k, "batch", None, None, None)
+    v = wlc(v, "batch", None, None, None)
+    out = chunked_attention(
+        q, k, v, causal=cfg.causal, window=cfg.window, softcap=cfg.softcap,
+        kv_chunk=kv_chunk, bf16_probs=bf16_probs,
+    )
+    out = out.reshape(x.shape[0], x.shape[1], -1)
+    out = wlc(out, "batch", "seq", None)
+    return out @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache (prefill + decode)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, Hkv, dh)
+    v: jax.Array  # (B, S_max, Hkv, dh)
+    length: jax.Array  # () int32 -- tokens already in cache
+
+
+def init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def attention_prefill(p, x, cfg: AttnConfig, positions, max_len: int,
+                      kv_chunk: int = 1024, cache_dtype=jnp.bfloat16,
+                      bf16_probs: bool = False):
+    """Run full attention AND build the cache.  Returns (out, cache)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = chunked_attention(
+        q, k, v, causal=cfg.causal, window=cfg.window, softcap=cfg.softcap,
+        kv_chunk=kv_chunk, bf16_probs=bf16_probs,
+    )
+    out = out.reshape(B, S, -1) @ p["wo"]
+    kc = jnp.zeros((B, max_len, cfg.n_kv, cfg.head_dim), cache_dtype)
+    vc = jnp.zeros_like(kc)
+    kc = lax.dynamic_update_slice(kc, k.astype(cache_dtype), (0, 0, 0, 0))
+    vc = lax.dynamic_update_slice(vc, v.astype(cache_dtype), (0, 0, 0, 0))
+    cache = KVCache(k=wlc(kc, "batch", "kv_seq", None, None),
+                    v=wlc(vc, "batch", "kv_seq", None, None),
+                    length=jnp.int32(S))
+    return out, cache
+
+
+def attention_decode(p, x, cfg: AttnConfig, cache: KVCache):
+    """One-token decode.  x: (B, 1, D).  Returns (out, new_cache).
+
+    The cache is sequence-sharded over the model axis; the softmax reduction
+    over the sharded key axis becomes a partial-max/sum all-reduce
+    (distributed flash-decode) under GSPMD.
+    """
+    B = x.shape[0]
+    pos = jnp.full((B, 1), cache.length, jnp.int32)
+    if cfg.mrope:
+        pos = jnp.repeat(pos[..., None], 3, axis=-1)
+    q, k, v = _project_qkv(p, x, cfg, pos)
+    kc = lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0))
+    vc = lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0))
+    kc = wlc(kc, "batch", "kv_seq", None, None)
+    vc = wlc(vc, "batch", "kv_seq", None, None)
+    S_max = kc.shape[1]
+    Hkv, dh = cfg.n_kv, cfg.head_dim
+    groups = cfg.n_heads // Hkv
+    qg = (q.astype(jnp.float32) / dh ** 0.5).reshape(B, 1, Hkv, groups, dh)
+    s = jnp.einsum("bshgd,bthd->bhgst", qg, kc.astype(jnp.float32))  # (B,Hkv,g,1,S)
+    if cfg.softcap > 0.0:
+        s = cfg.softcap * jnp.tanh(s / cfg.softcap)
+    k_pos = jnp.arange(S_max, dtype=jnp.int32)
+    valid = k_pos <= cache.length
+    if cfg.window > 0:
+        valid = valid & (k_pos > cache.length - cfg.window)
+    s = jnp.where(valid[None, None, None, None, :], s, _NEG)
+    p_att = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", p_att, vc.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.n_heads * dh).astype(x.dtype) @ p["wo"]
+    return out, KVCache(k=kc, v=vc, length=cache.length + 1)
+
+
+def cross_attention(p, x, ctx_k, ctx_v, cfg: AttnConfig):
+    """Encoder-decoder cross attention (whisper).  ctx_k/v: (B, S_enc, Hkv, dh)."""
+    B, S, _ = x.shape
+    q = (x @ p["wq"] + p.get("bq", 0.0)).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    out = chunked_attention(q, ctx_k, ctx_v, causal=False, kv_chunk=512)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def project_ctx_kv(p, ctx, cfg: AttnConfig):
+    B, S, _ = ctx.shape
+    k = (ctx @ p["wk"] + p.get("bk", 0.0)).reshape(B, S, cfg.n_kv, cfg.head_dim)
+    v = (ctx @ p["wv"] + p.get("bv", 0.0)).reshape(B, S, cfg.n_kv, cfg.head_dim)
+    return k, v

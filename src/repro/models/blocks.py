@@ -1,0 +1,188 @@
+"""Layer blocks: init/apply per block kind, composed by lm.py via a repeating
+pattern (`cfg.pattern` x `cfg.repeats` + `cfg.tail`).
+
+Block kinds:
+  attn / global  full-attention transformer layer (attn + MLP)
+  local          sliding-window attention layer
+  dense          alias of attn (used inside MoE interleave patterns)
+  moe            attention + MoE FFN
+  m1 / m2        Mamba-1 / Mamba-2 mixer layer
+  shared_attn    zamba-style shared transformer block (weights shared across
+                 repeats -- passed as a closure, not stacked)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    AttnConfig,
+    attention_block,
+    attention_decode,
+    attention_prefill,
+    init_attn,
+    init_cache,
+)
+from .common import layer_norm, rms_norm
+from .ffn import init_mlp, mlp_block
+from .moe import MoEConfig, init_moe, moe_block
+from .ssm import (
+    Mamba1Config,
+    Mamba2Config,
+    init_mamba1,
+    init_mamba1_cache,
+    init_mamba2,
+    init_mamba2_cache,
+    mamba1_block,
+    mamba1_decode,
+    mamba2_block,
+    mamba2_decode,
+)
+
+ATTN_KINDS = ("attn", "global", "local", "dense", "moe", "shared_attn")
+
+
+def attn_cfg_for(cfg, kind: str) -> AttnConfig:
+    local = kind == "local"
+    return AttnConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv,
+        head_dim=cfg.head_dim,
+        qkv_bias=cfg.qkv_bias,
+        window=cfg.window if local else 0,
+        softcap=cfg.attn_softcap,
+        rope_theta=cfg.rope_theta_local if local else cfg.rope_theta,
+        mrope=cfg.mrope,
+        causal=cfg.causal,
+    )
+
+
+def moe_cfg_for(cfg) -> MoEConfig:
+    return MoEConfig(
+        d_model=cfg.d_model,
+        d_ff=cfg.d_ff,
+        n_experts=cfg.n_experts,
+        top_k=cfg.moe_top_k,
+        capacity_factor=cfg.capacity_factor,
+        shared_expert_ff=cfg.shared_expert_ff,
+        bf16_gather=cfg.moe_bf16_gather,
+    )
+
+
+def m1_cfg_for(cfg) -> Mamba1Config:
+    return Mamba1Config(
+        d_model=cfg.d_model, d_inner=cfg.ssm_d_inner, d_state=cfg.ssm_state,
+        dt_rank=cfg.ssm_dt_rank, d_conv=cfg.ssm_conv,
+    )
+
+
+def m2_cfg_for(cfg) -> Mamba2Config:
+    return Mamba2Config(
+        d_model=cfg.d_model, d_inner=cfg.ssm_d_inner, d_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim, d_conv=cfg.ssm_conv,
+    )
+
+
+def _norm(cfg, x, p, name):
+    if cfg.norm == "rms":
+        return rms_norm(x, p[f"{name}_scale"])
+    return layer_norm(x, p[f"{name}_scale"], p[f"{name}_bias"])
+
+
+def _init_norm(cfg, dtype):
+    d = cfg.d_model
+    if cfg.norm == "rms":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def _norm_params(cfg, name, dtype):
+    base = _init_norm(cfg, dtype)
+    return {f"{name}_{k}": v for k, v in base.items()}
+
+
+def init_block(key, kind: str, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    p: dict = {}
+    if kind in ("attn", "global", "local", "dense", "moe", "shared_attn"):
+        p.update(_norm_params(cfg, "ln1", dtype))
+        p["attn"] = init_attn(ks[0], attn_cfg_for(cfg, kind), dtype)
+        p.update(_norm_params(cfg, "ln2", dtype))
+        if cfg.post_norms:
+            p.update(_norm_params(cfg, "ln1p", dtype))
+            p.update(_norm_params(cfg, "ln2p", dtype))
+        if kind == "moe":
+            p["moe"] = init_moe(ks[1], moe_cfg_for(cfg), dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp,
+                                dtype=dtype)
+    elif kind == "m1":
+        p.update(_norm_params(cfg, "ln1", dtype))
+        p["ssm"] = init_mamba1(ks[0], m1_cfg_for(cfg), dtype)
+    elif kind == "m2":
+        p.update(_norm_params(cfg, "ln1", dtype))
+        p["ssm"] = init_mamba2(ks[0], m2_cfg_for(cfg), dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def apply_block(kind: str, p, x, cfg, positions, mode: str = "train",
+                cache=None, max_len: int = 0):
+    """Returns (x, aux_loss, new_cache)."""
+    aux = jnp.float32(0.0)
+    new_cache = None
+    if kind in ("attn", "global", "local", "dense", "moe", "shared_attn"):
+        acfg = attn_cfg_for(cfg, kind)
+        h = _norm(cfg, x, p, "ln1")
+        if mode == "train":
+            a = attention_block(p["attn"], h, acfg, positions, cfg.kv_chunk,
+                                bf16_probs=cfg.attn_bf16_probs)
+        elif mode == "prefill":
+            a, new_cache = attention_prefill(
+                p["attn"], h, acfg, positions, max_len, cfg.kv_chunk,
+                bf16_probs=cfg.attn_bf16_probs,
+            )
+        else:  # decode
+            a, new_cache = attention_decode(p["attn"], h, acfg, cache)
+        if cfg.post_norms:
+            a = _norm(cfg, a, p, "ln1p")
+        x = x + a
+        h = _norm(cfg, x, p, "ln2")
+        if kind == "moe":
+            f, aux = moe_block(p["moe"], h, moe_cfg_for(cfg))
+        else:
+            f = mlp_block(p["mlp"], h, cfg.activation)
+        if cfg.post_norms:
+            f = _norm(cfg, f, p, "ln2p")
+        x = x + f
+    elif kind in ("m1", "m2"):
+        h = _norm(cfg, x, p, "ln1")
+        fwd = mamba1_block if kind == "m1" else mamba2_block
+        dec = mamba1_decode if kind == "m1" else mamba2_decode
+        scfg = m1_cfg_for(cfg) if kind == "m1" else m2_cfg_for(cfg)
+        kw = ({"fused": cfg.ssm_fused_chunks, "bf16_acts": cfg.ssm_bf16_acts}
+              if kind == "m1" else {})
+        if mode == "train":
+            s = fwd(p["ssm"], h, scfg, chunk=cfg.ssm_chunk, **kw)
+        elif mode == "prefill":
+            s, new_cache = fwd(
+                p["ssm"], h, scfg, return_cache=True, chunk=cfg.ssm_chunk, **kw
+            )
+        else:
+            s, new_cache = dec(p["ssm"], h, scfg, cache)
+        x = x + s
+    else:
+        raise ValueError(kind)
+    return x, aux, new_cache
+
+
+def init_block_cache(kind: str, cfg, batch: int, max_len: int):
+    if kind in ("attn", "global", "local", "dense", "moe", "shared_attn"):
+        return init_cache(attn_cfg_for(cfg, kind), batch, max_len)
+    if kind == "m1":
+        return init_mamba1_cache(m1_cfg_for(cfg), batch)
+    if kind == "m2":
+        return init_mamba2_cache(m2_cfg_for(cfg), batch)
+    raise ValueError(kind)

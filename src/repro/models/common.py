@@ -1,0 +1,103 @@
+"""Shared model components: norms, rotary embeddings (RoPE / M-RoPE),
+initialisers.  Functional style: params are nested dicts of jnp arrays."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(dt)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,  # (B, S, H, dh)
+    positions: jax.Array,  # (B, S, 3) int32  (temporal, height, width streams)
+    theta: float = 10000.0,
+    sections: tuple[float, float, float] = (0.25, 0.375, 0.375),
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the dh/2 frequency slots are partitioned into
+    three sections driven by the (t, h, w) position streams.  For pure-text
+    positions (all three streams equal) this reduces to standard RoPE."""
+    dh = x.shape[-1]
+    half = dh // 2
+    n_t = int(half * sections[0])
+    n_h = int(half * sections[1])
+    n_w = half - n_t - n_h
+    freqs = rope_freqs(dh, theta)  # (half,)
+    sec_pos = jnp.concatenate(
+        [
+            jnp.repeat(positions[..., 0:1], n_t, axis=-1),
+            jnp.repeat(positions[..., 1:2], n_h, axis=-1),
+            jnp.repeat(positions[..., 2:3], n_w, axis=-1),
+        ],
+        axis=-1,
+    )  # (B, S, half)
+    ang = sec_pos.astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal position table (max_len, d_model)."""
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d_model))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array, mask=None):
+    """Mean CE over tokens.  logits (B, S, V) (possibly vocab-sharded), labels
+    (B, S) int32; mask (B, S) optional."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

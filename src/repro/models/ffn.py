@@ -1,0 +1,36 @@
+"""Dense feed-forward blocks (SwiGLU / GeGLU / GELU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import with_logical_constraint as wlc
+from .common import dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[0], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp_block(p, x, activation: str = "silu"):
+    """x: (B, S, D) -> (B, S, D).  Megatron column->row sharding via the
+    logical 'tp' axis on w_gate/w_up (out) and w_down (in)."""
+    h_up = x @ p["w_up"]
+    if "w_gate" in p:
+        g = x @ p["w_gate"]
+        act = jax.nn.gelu(g, approximate=True) if activation == "gelu" else jax.nn.silu(g)
+        h = act * h_up
+    else:
+        h = jax.nn.gelu(h_up, approximate=True) if activation == "gelu" else jax.nn.silu(h_up)
+    # Megatron column->row: hidden activations sharded over model ("tp");
+    # sequence is NOT sharded here (one mesh axis per spec) -- GSPMD turns
+    # the seq->tp boundary into the all-gather / reduce-scatter pair.
+    h = wlc(h, "batch", None, "tp")
+    return h @ p["w_down"]

@@ -1,0 +1,221 @@
+"""Decoder LM: init / forward / loss / prefill / decode, with
+lax.scan-over-layers (pattern repeats) + optional remat.
+
+Layer structure comes from the config: a repeating `pattern` of block kinds
+applied `repeats` times, then `tail` blocks.  Parameters for pattern slot j
+are stacked over repeats (leading axis) and scanned; `shared_attn` slots
+(zamba) are NOT stacked -- one weight set is closed over and reused every
+repeat, which is exactly the Zamba design.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding import with_logical_constraint as wlc
+from .blocks import apply_block, init_block, init_block_cache
+from .common import dense_init, rms_norm, layer_norm, softmax_cross_entropy
+
+
+def _stacked_init(key, kind, cfg, repeats, dtype):
+    keys = jax.random.split(key, repeats)
+    return jax.vmap(lambda k: init_block(k, kind, cfg, dtype))(keys)
+
+
+def init_lm(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": {
+            "embedding": (
+                jax.random.normal(ks[0], (cfg.vocab_padded, cfg.d_model)) * 0.02
+            ).astype(dtype)
+        },
+        "final_norm": {
+            f"fn_{k}": v
+            for k, v in (
+                {"scale": jnp.zeros((cfg.d_model,), dtype)}
+                if cfg.norm == "rms"
+                else {"scale": jnp.ones((cfg.d_model,), dtype),
+                      "bias": jnp.zeros((cfg.d_model,), dtype)}
+            ).items()
+        },
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {
+            "lm_head": dense_init(ks[1], (cfg.d_model, cfg.vocab_padded), dtype=dtype)
+        }
+    pat: dict[str, Any] = {}
+    for j, kind in enumerate(cfg.pattern):
+        if kind == "shared_attn":
+            if "shared" not in params:
+                params["shared"] = init_block(ks[2], kind, cfg, dtype)
+            pat[f"slot{j}"] = {}
+        else:
+            pat[f"slot{j}"] = _stacked_init(
+                jax.random.fold_in(ks[3], j), kind, cfg, cfg.repeats, dtype
+            )
+    params["pattern"] = pat
+    tail: dict[str, Any] = {}
+    for j, kind in enumerate(cfg.tail):
+        tail[f"tail{j}"] = init_block(jax.random.fold_in(ks[4], j), kind, cfg, dtype)
+    if tail:
+        params["tailp"] = tail
+    return params
+
+
+def _final_norm(cfg, p, x):
+    if cfg.norm == "rms":
+        return rms_norm(x, p["final_norm"]["fn_scale"])
+    return layer_norm(x, p["final_norm"]["fn_scale"], p["final_norm"]["fn_bias"])
+
+
+def embed_tokens(cfg, params, tokens):
+    x = params["embed"]["embedding"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return wlc(x, "batch", "seq", None)
+
+
+def unembed(cfg, params, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["embedding"].T
+    else:
+        logits = x @ params["head"]["lm_head"]
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    # vocab-sharded logits (the CE logsumexp reduces over the sharded axis);
+    # seq is NOT also sharded -- one mesh axis per spec
+    return wlc(logits, "batch", None, "vocab")
+
+
+def forward(params, tokens, cfg, positions=None, inputs_embeds=None,
+            mode: str = "train"):
+    """tokens: (B, S) int32 -> final hidden states (B, S, D).
+    `inputs_embeds` overrides the embedding lookup (VLM splice path)."""
+    x = inputs_embeds if inputs_embeds is not None else embed_tokens(cfg, params, tokens)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, slot_params):
+        aux_tot = jnp.float32(0.0)
+        for j, kind in enumerate(cfg.pattern):
+            p_j = params["shared"] if kind == "shared_attn" else slot_params[f"slot{j}"]
+            x, aux, _ = apply_block(kind, p_j, x, cfg, positions, mode="train")
+            aux_tot += aux
+        return x, aux_tot
+
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat_policy == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        body = jax.checkpoint(body, policy=policy)
+
+    def scan_body(x, slot_params):
+        return body(x, slot_params)
+
+    x, auxs = lax.scan(scan_body, x, params["pattern"])
+    aux_total = jnp.sum(auxs)
+    for j, kind in enumerate(cfg.tail):
+        x, aux, _ = apply_block(kind, params["tailp"][f"tail{j}"], x, cfg,
+                                positions, mode="train")
+        aux_total += aux
+    x = _final_norm(cfg, params, x)
+    return x, aux_total
+
+
+def loss_fn(params, batch, cfg):
+    """batch: {tokens (B,S), labels (B,S)} (+ vlm extras) -> scalar loss."""
+    positions = batch.get("positions")
+    inputs_embeds = None
+    if cfg.vlm:
+        from .vlm import splice_patches
+
+        inputs_embeds, positions = splice_patches(cfg, params, batch)
+    hidden, aux = forward(params, batch["tokens"], cfg, positions=positions,
+                          inputs_embeds=inputs_embeds)
+    logits = unembed(cfg, params, hidden)
+    mask = batch.get("mask")
+    ce = softmax_cross_entropy(logits, batch["labels"], mask)
+    return ce + cfg.aux_loss_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with stacked caches
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    pat = {}
+    for j, kind in enumerate(cfg.pattern):
+        one = init_block_cache(kind, cfg, batch, max_len)
+        pat[f"slot{j}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.repeats,) + a.shape), one
+        )
+    tail = {
+        f"tail{j}": init_block_cache(kind, cfg, batch, max_len)
+        for j, kind in enumerate(cfg.tail)
+    }
+    return {"pattern": pat, "tail": tail}
+
+
+def prefill(params, tokens, cfg, max_len: int, positions=None, inputs_embeds=None):
+    """Process the prompt, build caches.  Returns (last_logits, caches)."""
+    x = inputs_embeds if inputs_embeds is not None else embed_tokens(cfg, params, tokens)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def scan_body(x, slot_params):
+        caches = {}
+        for j, kind in enumerate(cfg.pattern):
+            p_j = params["shared"] if kind == "shared_attn" else slot_params[f"slot{j}"]
+            x, _, cache = apply_block(kind, p_j, x, cfg, positions,
+                                      mode="prefill", max_len=max_len)
+            caches[f"slot{j}"] = cache
+        return x, caches
+
+    x, pat_caches = lax.scan(scan_body, x, params["pattern"])
+    tail_caches = {}
+    for j, kind in enumerate(cfg.tail):
+        x, _, cache = apply_block(kind, params["tailp"][f"tail{j}"], x, cfg,
+                                  positions, mode="prefill", max_len=max_len)
+        tail_caches[f"tail{j}"] = cache
+    x = _final_norm(cfg, params, x)
+    logits = unembed(cfg, params, x[:, -1:, :])
+    return logits[:, 0, :], {"pattern": pat_caches, "tail": tail_caches}
+
+
+def decode_step(params, token, caches, cfg):
+    """One token step.  token: (B, 1) int32.  Returns (logits (B, V), caches)."""
+    x = embed_tokens(cfg, params, token)
+
+    def scan_body(x, slots):
+        slot_params, slot_caches = slots
+        new_caches = {}
+        for j, kind in enumerate(cfg.pattern):
+            p_j = params["shared"] if kind == "shared_attn" else slot_params[f"slot{j}"]
+            x, _, cache = apply_block(kind, p_j, x, cfg, None, mode="decode",
+                                      cache=slot_caches[f"slot{j}"])
+            new_caches[f"slot{j}"] = cache
+        return x, new_caches
+
+    x, new_pat = lax.scan(scan_body, x, (params["pattern"], caches["pattern"]))
+    new_tail = {}
+    for j, kind in enumerate(cfg.tail):
+        x, _, cache = apply_block(kind, params["tailp"][f"tail{j}"], x, cfg, None,
+                                  mode="decode", cache=caches["tail"][f"tail{j}"])
+        new_tail[f"tail{j}"] = cache
+    x = _final_norm(cfg, params, x)
+    logits = unembed(cfg, params, x)
+    return logits[:, 0, :], {"pattern": new_pat, "tail": new_tail}
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,340 @@
+"""State-space blocks: Mamba-1 (selective scan) and Mamba-2 (SSD chunked).
+
+Sharding: SSM channels (d_inner) are tensor-parallel over the model axis --
+in_proj column-sharded, out_proj row-sharded, the recurrence is elementwise
+in channels so no cross-shard communication happens inside the scan.
+Sequence stays unsharded here (a depthwise causal conv + recurrence across a
+sequence shard would need halo exchanges for no memory benefit: the state is
+tiny).
+
+Mamba-1 runs a chunked lax.scan (outer over chunks, inner over steps);
+Mamba-2 uses the SSD matmul form (MXU-friendly): intra-chunk attention-like
+masked matmuls + inter-chunk state recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding import with_logical_constraint as wlc
+from .common import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+
+class Mamba1Config(NamedTuple):
+    d_model: int
+    d_inner: int
+    d_state: int
+    dt_rank: int
+    d_conv: int = 4
+
+
+def init_mamba1(key, cfg: Mamba1Config, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    D, Di, N, R = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * Di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, Di), dtype=dtype),
+        "conv_b": jnp.zeros((Di,), dtype),
+        "x_proj": dense_init(ks[2], (Di, R + 2 * N), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (R, Di), dtype=dtype),
+        "dt_bias": jnp.zeros((Di,), dtype),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (Di, N))
+        ).astype(dtype),
+        "D": jnp.ones((Di,), dtype),
+        "out_proj": dense_init(ks[4], (Di, D), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv over time.  x: (B, L, C), w: (k, C).
+    tail: (B, k-1, C) previous context (decode/prefill continuation)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, L+k-1, C)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b, xp[:, -(k - 1) :, :]  # (out, new tail)
+
+
+class SSMCache(NamedTuple):
+    conv_tail: jax.Array  # (B, k-1, C)
+    state: jax.Array  # mamba1: (B, Di, N);  mamba2: (B, H, N, hd)
+    length: jax.Array
+
+
+def _mamba1_scan(dtA, dBx, h0, chunk: int = 64):
+    """h_t = exp(dtA_t) * h_{t-1} + dBx_t; returns all h and final h.
+    dtA, dBx: (B, L, Di, N).  Chunked: outer scan over L/chunk, inner scan."""
+    B, L, Di, N = dtA.shape
+    chunk = min(chunk, L)
+    nc = (L + chunk - 1) // chunk
+    pad = nc * chunk - L
+    if pad:
+        dtA = jnp.pad(dtA, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dBx = jnp.pad(dBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    a = jnp.exp(dtA).reshape(B, nc, chunk, Di, N).transpose(1, 2, 0, 3, 4)
+    b = dBx.reshape(B, nc, chunk, Di, N).transpose(1, 2, 0, 3, 4)
+
+    def outer(h, inp):
+        a_c, b_c = inp  # (chunk, B, Di, N)
+
+        def inner(hh, ab):
+            aa, bb = ab
+            hh = aa * hh + bb
+            return hh, hh
+
+        h, hs = lax.scan(inner, h, (a_c, b_c))
+        return h, hs
+
+    h_fin, hs = lax.scan(outer, h0, (a, b))  # hs: (nc, chunk, B, Di, N)
+    hs = hs.reshape(nc * chunk, B, Di, N).transpose(1, 0, 2, 3)[:, :L]
+    return hs, h_fin
+
+
+def _mamba1_fused(dt, x1, Bc, Cc, A, h0, chunk: int):
+    """Beyond-baseline path (EXPERIMENTS.md §Perf, falcon-mamba it.1):
+    the (B, L, Di, N) tensors dtA/dBx and the state trajectory hs are never
+    materialised -- each scan step forms them from (B, Di)/(B, N) slices and
+    immediately contracts with C_t.  HBM traffic drops by ~the state-dim
+    factor N vs the naive path.
+
+    dt, x1: (B, L, Di) fp32; Bc, Cc: (B, L, N) fp32; A: (Di, N).
+    Returns (y (B, L, Di) fp32, h_fin (B, Di, N))."""
+    B, L, Di = dt.shape
+    N = Bc.shape[-1]
+    chunk = min(chunk, L)
+    nc = (L + chunk - 1) // chunk
+    pad = nc * chunk - L
+
+    def pad_t(t):
+        return jnp.pad(t, ((0, 0), (0, pad), (0, 0))) if pad else t
+
+    # (nc, chunk, B, ...) time-major layout for the nested scan
+    def chunked(t):
+        d = t.shape[-1]
+        return pad_t(t).reshape(B, nc, chunk, d).transpose(1, 2, 0, 3)
+
+    dt_c, x_c, B_c, C_c = chunked(dt), chunked(x1), chunked(Bc), chunked(Cc)
+
+    def outer(h, inp):
+        dt_k, x_k, B_k, C_k = inp  # (chunk, B, .)
+
+        def inner(h, step):
+            dt_t, x_t, B_t, C_t = step  # (B, Di), (B, Di), (B, N), (B, N)
+            dt_t = dt_t.astype(jnp.float32)  # in-register upcasts when the
+            x_t = x_t.astype(jnp.float32)    # inputs are carried in bf16
+            B_t = B_t.astype(jnp.float32)
+            C_t = C_t.astype(jnp.float32)
+            a = jnp.exp(dt_t[..., None] * A[None])  # (B, Di, N)
+            b = (dt_t * x_t)[..., None] * B_t[:, None, :]
+            h = a * h + b
+            y_t = jnp.einsum("bin,bn->bi", h, C_t)
+            return h, y_t
+
+        h, ys = lax.scan(inner, h, (dt_k, x_k, B_k, C_k))
+        return h, ys
+
+    h_fin, ys = lax.scan(outer, h0, (dt_c, x_c, B_c, C_c))
+    y = ys.reshape(nc * chunk, B, Di).transpose(1, 0, 2)[:, :L]
+    return y, h_fin
+
+
+def mamba1_block(p, x, cfg: Mamba1Config, cache: SSMCache | None = None,
+                 return_cache: bool = False, chunk: int = 64,
+                 fused: bool = False, bf16_acts: bool = False):
+    """x: (B, L, D) -> (B, L, D)  (+ cache when requested)."""
+    B, L, D = x.shape
+    Di, N, R = cfg.d_inner, cfg.d_state, cfg.dt_rank
+    xz = x @ p["in_proj"]  # (B, L, 2Di) column-sharded
+    xz = wlc(xz, "batch", None, "tp")
+    x1, z = jnp.split(xz, 2, axis=-1)
+    tail = cache.conv_tail if cache is not None else None
+    x1, new_tail = _causal_conv(x1, p["conv_w"], p["conv_b"], tail)
+    x1 = jax.nn.silu(x1)
+
+    x_dbl = x1 @ p["x_proj"]  # contraction over sharded Di -> psum
+    dt_r, Bc, Cc = jnp.split(x_dbl, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"])  # (B, L, Di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (Di, N)
+
+    h0 = (
+        cache.state if cache is not None
+        else jnp.zeros((B, Di, N), jnp.float32)
+    )
+    if fused:
+        act_dt = jnp.bfloat16 if bf16_acts else jnp.float32
+        y, h_fin = _mamba1_fused(
+            dt.astype(act_dt), x1.astype(act_dt),
+            Bc.astype(act_dt), Cc.astype(act_dt), A, h0, chunk
+        )
+    else:
+        dtA = dt.astype(jnp.float32)[..., None] * A[None, None]  # (B, L, Di, N)
+        dBx = (dt * x1).astype(jnp.float32)[..., None] * Bc.astype(jnp.float32)[:, :, None, :]
+        hs, h_fin = _mamba1_scan(dtA, dBx, h0, chunk=chunk)
+        y = jnp.einsum("blin,bln->bli", hs, Cc.astype(jnp.float32))
+    y = (y + x1.astype(jnp.float32) * p["D"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]  # row-sharded -> psum
+    out = wlc(out, "batch", None, None)
+    if return_cache:
+        new_len = (cache.length if cache is not None else 0) + L
+        return out, SSMCache(new_tail, h_fin, jnp.int32(new_len))
+    return out
+
+
+def mamba1_decode(p, x, cfg: Mamba1Config, cache: SSMCache):
+    """Single-token step; x: (B, 1, D)."""
+    return mamba1_block(p, x, cfg, cache=cache, return_cache=True, chunk=1)
+
+
+def init_mamba1_cache(cfg: Mamba1Config, batch: int, dtype=jnp.float32):
+    return SSMCache(
+        conv_tail=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        state=jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+class Mamba2Config(NamedTuple):
+    d_model: int
+    d_inner: int
+    d_state: int
+    head_dim: int = 64
+    d_conv: int = 4
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2(key, cfg: Mamba2Config, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    D, Di, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    d_conv_ch = Di + 2 * N  # conv runs over (x, B, C)
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * Di + 2 * N + H), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, d_conv_ch), dtype=dtype),
+        "conv_b": jnp.zeros((d_conv_ch,), dtype),
+        "dt_bias_h": jnp.zeros((H,), dtype),
+        "A_log_h": jnp.zeros((H,), dtype),
+        "D_h": jnp.ones((H,), dtype),
+        "norm_scale": jnp.zeros((Di,), dtype),
+        "out_proj": dense_init(ks[2], (Di, D), dtype=dtype),
+    }
+
+
+def _segsum(dA):
+    """dA: (..., c) -> (..., c, c) lower-triangular cumulative sums
+    seg[t, j] = sum_{i=j+1..t} dA_i  (for j <= t)."""
+    c = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def mamba2_block(p, x, cfg: Mamba2Config, cache: SSMCache | None = None,
+                 return_cache: bool = False, chunk: int = 64):
+    """SSD forward.  x: (B, L, D)."""
+    from .common import rms_norm
+
+    B, L, D = x.shape
+    Di, N, H, hd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    proj = x @ p["in_proj"]
+    proj = wlc(proj, "batch", None, None)
+    z, xbc, dt = jnp.split(proj, [Di, 2 * Di + 2 * N], axis=-1)
+    tail = cache.conv_tail if cache is not None else None
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], tail)
+    xbc = jax.nn.silu(xbc)
+    xs, Bc, Cc = jnp.split(xbc, [Di, Di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias_h"])  # (B, L, H)
+    A = -jnp.exp(p["A_log_h"].astype(jnp.float32))  # (H,)
+    dA = dt * A  # (B, L, H)
+
+    chunk = min(chunk, L)
+    nc = (L + chunk - 1) // chunk
+    pad = nc * chunk - L
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Xc = xs.reshape(B, nc, chunk, H, hd).astype(jnp.float32)
+    Bm = Bc.reshape(B, nc, chunk, N).astype(jnp.float32)
+    Cm = Cc.reshape(B, nc, chunk, N).astype(jnp.float32)
+    dAc = dA.reshape(B, nc, chunk, H)
+    dtc = dt.reshape(B, nc, chunk, H)
+
+    # intra-chunk (attention-like): M[t,j] = (C_t.B_j) exp(seg) dt_j
+    seg = _segsum(dAc.transpose(0, 1, 3, 2))  # (B, k, H, c, c)
+    CB = jnp.einsum("bktn,bkjn->bktj", Cm, Bm)  # (B, k, c, c)
+    M = CB[:, :, None] * jnp.exp(seg) * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    Y_intra = jnp.einsum("bkhtj,bkjhd->bkthd", M, Xc)
+
+    # chunk-final states: S_k = sum_j exp(cum_last - cum_j) dt_j B_j (x) X_j
+    cum = jnp.cumsum(dAc, axis=2)  # (B, k, c, H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B, k, c, H)
+    Sk = jnp.einsum(
+        "bkch,bkcn,bkchd->bkhnd", decay_to_end * dtc, Bm, Xc
+    )  # (B, k, H, N, hd)
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(jnp.sum(dAc, axis=2))  # (B, nc, H)
+
+    def step(S_prev, inp):
+        Sk_c, dec = inp  # (B, H, N, hd), (B, H)
+        S_new = S_prev * dec[..., None, None] + Sk_c
+        return S_new, S_prev
+
+    S0 = (
+        cache.state if cache is not None
+        else jnp.zeros((B, H, N, hd), jnp.float32)
+    )
+    S_fin, S_prevs = lax.scan(
+        step,
+        S0,
+        (Sk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)  # (B, k, H, N, hd)
+    Y_inter = jnp.einsum(
+        "bkcn,bkch,bkhnd->bkchd", Cm, jnp.exp(cum), S_prevs
+    )
+
+    y = (Y_intra + Y_inter).reshape(B, nc * chunk, H, hd)[:, :L]
+    y = y + Xc.reshape(B, nc * chunk, H, hd)[:, :L] * p["D_h"][None, None, :, None]
+    y = y.reshape(B, L, Di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_scale"])
+    out = y @ p["out_proj"]
+    out = wlc(out, "batch", None, None)
+    if return_cache:
+        new_len = (cache.length if cache is not None else 0) + L
+        return out, SSMCache(new_tail, S_fin, jnp.int32(new_len))
+    return out
+
+
+def mamba2_decode(p, x, cfg: Mamba2Config, cache: SSMCache):
+    return mamba2_block(p, x, cfg, cache=cache, return_cache=True, chunk=1)
+
+
+def init_mamba2_cache(cfg: Mamba2Config, batch: int, dtype=jnp.float32):
+    return SSMCache(
+        conv_tail=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner + 2 * cfg.d_state), dtype),
+        state=jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )

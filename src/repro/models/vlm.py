@@ -1,0 +1,52 @@
+"""VLM wrapper (qwen2-vl): the modality frontend is a STUB per spec --
+`input_specs()` provides precomputed patch embeddings (B, P, d_model); this
+module splices them ahead of the text embeddings and builds M-RoPE position
+streams (t, h, w): patches get grid positions, text continues sequentially.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .lm import embed_tokens
+
+
+def mrope_positions(batch: int, n_patches: int, s_text: int, grid: int | None = None):
+    """(B, P + S_text, 3) position streams."""
+    grid = grid or max(1, int(n_patches ** 0.5))
+    idx = jnp.arange(n_patches, dtype=jnp.int32)
+    patch_pos = jnp.stack(
+        [jnp.zeros_like(idx), idx // grid, idx % grid], axis=-1
+    )  # (P, 3)
+    # text stream continues at index n_patches (>= max spatial extent, so no
+    # overlap with patch positions, and decode's cache.length-based positions
+    # continue it exactly)
+    start = jnp.int32(n_patches)
+    tpos = start + jnp.arange(s_text, dtype=jnp.int32)
+    text_pos = jnp.stack([tpos, tpos, tpos], axis=-1)  # (S_text, 3)
+    pos = jnp.concatenate([patch_pos, text_pos], axis=0)
+    return jnp.broadcast_to(pos, (batch, n_patches + s_text, 3))
+
+
+def splice_patches(cfg, params, batch):
+    """batch: {tokens (B, S_text), patch_embeds (B, P, D)} ->
+    (inputs_embeds (B, P+S_text, D), positions (B, P+S_text, 3))."""
+    from repro.sharding import with_logical_constraint as wlc
+
+    tokens = batch["tokens"]
+    patches = batch["patch_embeds"]
+    B, P, D = patches.shape
+    text_embeds = embed_tokens(cfg, params, tokens)
+    if cfg.vlm_sharded_splice:
+        # §Perf (qwen2-vl it.1): concatenating a seq-replicated patch block
+        # with seq-sharded text makes GSPMD emit a pad+add(all-reduce) of the
+        # FULL activation per participant.  Align both inputs to the same
+        # (batch-only) sharding, concat locally, then reshard to seq.
+        patches = wlc(patches.astype(text_embeds.dtype), "batch", None, None)
+        text_embeds = wlc(text_embeds, "batch", None, None)
+        x = jnp.concatenate([patches, text_embeds], axis=1)
+        x = wlc(x, "batch", "seq", None)
+    else:
+        x = jnp.concatenate([patches.astype(text_embeds.dtype), text_embeds], axis=1)
+    positions = mrope_positions(B, P, tokens.shape[1])
+    return x, positions

@@ -1,0 +1,194 @@
+"""Whisper-style encoder-decoder backbone.  The conv audio frontend is a STUB
+per spec: inputs are precomputed frame embeddings (B, S_enc, d_model).
+
+Encoder: bidirectional attention + GELU MLP, sinusoidal positions.
+Decoder: causal self-attention + cross-attention + GELU MLP, learned
+positions; tied unembedding.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .attention import (
+    AttnConfig,
+    attention_block,
+    attention_decode,
+    attention_prefill,
+    cross_attention,
+    init_attn,
+    init_cache,
+    project_ctx_kv,
+)
+from .common import dense_init, layer_norm, softmax_cross_entropy
+from .ffn import init_mlp, mlp_block
+
+
+def _acfg(cfg, causal: bool) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.head_dim, qkv_bias=True, rope_theta=0.0, causal=causal,
+    )
+
+
+def _ln_params(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": _ln_params(cfg.d_model, dtype),
+        "attn": init_attn(ks[0], _acfg(cfg, False), dtype),
+        "ln2": _ln_params(cfg.d_model, dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, gated=False, dtype=dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": _ln_params(cfg.d_model, dtype),
+        "self_attn": init_attn(ks[0], _acfg(cfg, True), dtype),
+        "ln_x": _ln_params(cfg.d_model, dtype),
+        "cross_attn": init_attn(ks[1], _acfg(cfg, False), dtype),
+        "ln2": _ln_params(cfg.d_model, dtype),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, gated=False, dtype=dtype),
+    }
+
+
+def init_whisper(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    n_dec = cfg.n_layers - cfg.n_enc_layers
+    dec_keys = jax.random.split(ks[1], n_dec)
+    return {
+        "embed": {
+            "embedding": (
+                jax.random.normal(ks[2], (cfg.vocab_padded, cfg.d_model)) * 0.02
+            ).astype(dtype)
+        },
+        "dec_pos": {
+            "pos_embedding": (
+                jax.random.normal(ks[3], (cfg.max_pos, cfg.d_model)) * 0.01
+            ).astype(dtype)
+        },
+        "enc": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "dec": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+        "enc_ln": _ln_params(cfg.d_model, dtype),
+        "dec_ln": _ln_params(cfg.d_model, dtype),
+    }
+
+
+def _ln(x, p):
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def encode(params, frames, cfg):
+    """frames: (B, S_enc, D) stub embeddings -> encoder states."""
+    from .common import sinusoidal_positions
+
+    B, S, D = frames.shape
+    x = frames + sinusoidal_positions(S, D)[None].astype(frames.dtype)
+    acfg = _acfg(cfg, False)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, lp):
+        h = _ln(x, lp["ln1"])
+        x = x + attention_block(lp["attn"], h, acfg, pos, cfg.kv_chunk)
+        h = _ln(x, lp["ln2"])
+        x = x + mlp_block(lp["mlp"], h, "gelu")
+        return x, None
+
+    x, _ = lax.scan(body, x, params["enc"])
+    return _ln(x, params["enc_ln"])
+
+
+def decode_train(params, tokens, enc_states, cfg):
+    B, S = tokens.shape
+    x = params["embed"]["embedding"][tokens] + params["dec_pos"]["pos_embedding"][:S][None]
+    self_cfg = _acfg(cfg, True)
+    x_cfg = _acfg(cfg, False)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, lp):
+        h = _ln(x, lp["ln1"])
+        x = x + attention_block(lp["self_attn"], h, self_cfg, pos, cfg.kv_chunk)
+        h = _ln(x, lp["ln_x"])
+        ck, cv = project_ctx_kv(lp["cross_attn"], enc_states, x_cfg)
+        x = x + cross_attention(lp["cross_attn"], h, ck, cv, x_cfg)
+        h = _ln(x, lp["ln2"])
+        x = x + mlp_block(lp["mlp"], h, "gelu")
+        return x, None
+
+    x, _ = lax.scan(body, x, params["dec"])
+    x = _ln(x, params["dec_ln"])
+    return x @ params["embed"]["embedding"].T
+
+
+def loss_fn(params, batch, cfg):
+    enc = encode(params, batch["frames"], cfg)
+    logits = decode_train(params, batch["tokens"], enc, cfg)
+    ce = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+
+# -- serving ----------------------------------------------------------------
+
+
+def prefill(params, batch, cfg, max_len: int):
+    """Encode audio + run the decoder prompt; build self/cross caches."""
+    enc = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"]["embedding"][tokens] + params["dec_pos"]["pos_embedding"][:S][None]
+    self_cfg = _acfg(cfg, True)
+    x_cfg = _acfg(cfg, False)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, lp):
+        h = _ln(x, lp["ln1"])
+        a, cache = attention_prefill(lp["self_attn"], h, self_cfg, pos, max_len,
+                                     cfg.kv_chunk)
+        x = x + a
+        h = _ln(x, lp["ln_x"])
+        ck, cv = project_ctx_kv(lp["cross_attn"], enc, x_cfg)
+        x = x + cross_attention(lp["cross_attn"], h, ck, cv, x_cfg)
+        h = _ln(x, lp["ln2"])
+        x = x + mlp_block(lp["mlp"], h, "gelu")
+        return x, (cache, ck, cv)
+
+    x, (caches, cks, cvs) = lax.scan(body, x, params["dec"])
+    x = _ln(x, params["dec_ln"])
+    logits = x[:, -1:, :] @ params["embed"]["embedding"].T
+    return logits[:, 0], {"self": caches, "ck": cks, "cv": cvs,
+                          "length": jnp.int32(S)}
+
+
+def decode_step(params, token, caches, cfg):
+    B = token.shape[0]
+    x = (params["embed"]["embedding"][token]
+         + params["dec_pos"]["pos_embedding"][caches["length"]][None, None])
+    self_cfg = _acfg(cfg, True)
+    x_cfg = _acfg(cfg, False)
+
+    def body(x, lp_cache):
+        lp, cache, ck, cv = lp_cache
+        h = _ln(x, lp["ln1"])
+        a, new_cache = attention_decode(lp["self_attn"], h, self_cfg, cache)
+        x = x + a
+        h = _ln(x, lp["ln_x"])
+        x = x + cross_attention(lp["cross_attn"], h, ck, cv, x_cfg)
+        h = _ln(x, lp["ln2"])
+        x = x + mlp_block(lp["mlp"], h, "gelu")
+        return x, new_cache
+
+    x, new_caches = lax.scan(
+        body, x, (params["dec"], caches["self"], caches["ck"], caches["cv"])
+    )
+    x = _ln(x, params["dec_ln"])
+    logits = (x @ params["embed"]["embedding"].T)[:, 0]
+    return logits, {**caches, "self": new_caches, "length": caches["length"] + 1}

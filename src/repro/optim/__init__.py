@@ -1,0 +1,12 @@
+from .adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+from .schedule import cosine_schedule
+from .grad_compress import compress_psum_int8
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "compress_psum_int8",
+]

@@ -1,0 +1,3 @@
+from .engine import RetrievalEngine
+
+__all__ = ["RetrievalEngine"]

@@ -1,0 +1,93 @@
+"""Retrieval serving engine: model embeddings + LCCS-LSH ANN (the paper's
+workload with one of the assigned backbones in the loop).
+
+  build:  corpus token sequences -> backbone final-hidden mean-pool
+          embeddings -> LCCSIndex (hash strings + CSA).
+  serve:  batched requests -> embed -> lambda-LCCS candidates -> verified
+          top-k, with a micro-batching request queue.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LCCSIndex
+from repro.models import lm
+
+
+@dataclass
+class ServeStats:
+    requests: int = 0
+    batches: int = 0
+    embed_s: float = 0.0
+    search_s: float = 0.0
+
+
+class RetrievalEngine:
+    def __init__(self, cfg, params, *, m: int = 64, metric: str = "angular",
+                 max_batch: int = 32):
+        self.cfg = cfg
+        self.params = params
+        self.m = m
+        self.metric = metric
+        self.max_batch = max_batch
+        self.index: LCCSIndex | None = None
+        self.stats = ServeStats()
+        self._embed = jax.jit(self._embed_fn)
+
+    def _embed_fn(self, tokens):
+        hidden, _ = lm.forward(self.params, tokens, self.cfg, mode="train")
+        emb = jnp.mean(hidden, axis=1)
+        return emb / jnp.linalg.norm(emb, axis=-1, keepdims=True)
+
+    def embed(self, tokens: np.ndarray) -> np.ndarray:
+        out = []
+        for lo in range(0, tokens.shape[0], self.max_batch):
+            out.append(np.asarray(self._embed(jnp.asarray(tokens[lo : lo + self.max_batch]))))
+        return np.concatenate(out)
+
+    def build_index(self, corpus_tokens: np.ndarray, *, seed: int = 0):
+        emb = self.embed(corpus_tokens)
+        fam = "angular" if self.metric == "angular" else "euclidean"
+        self.index = LCCSIndex.build(emb, m=self.m, family=fam, seed=seed)
+        return self.index
+
+    def serve_batch(self, query_tokens: np.ndarray, *, k: int = 5, lam: int = 64,
+                    probes: int = 1):
+        """One micro-batched serving step.  Returns (ids, dists)."""
+        assert self.index is not None, "build_index first"
+        t0 = time.time()
+        q_emb = self.embed(query_tokens)
+        t1 = time.time()
+        ids, dists = self.index.query(jnp.asarray(q_emb), k=k, lam=lam, probes=probes)
+        t2 = time.time()
+        self.stats.requests += query_tokens.shape[0]
+        self.stats.batches += 1
+        self.stats.embed_s += t1 - t0
+        self.stats.search_s += t2 - t1
+        return np.asarray(ids), np.asarray(dists)
+
+    def serve_stream(self, requests: list[np.ndarray], **kw):
+        """Greedy micro-batching over a request stream (batched requests
+        deliverable): coalesce up to max_batch queued requests per step."""
+        results = []
+        queue: list[np.ndarray] = []
+
+        def flush():
+            if not queue:
+                return
+            batch = np.stack(queue)
+            ids, dists = self.serve_batch(batch, **kw)
+            results.extend(zip(ids, dists))
+            queue.clear()
+
+        for r in requests:
+            queue.append(r)
+            if len(queue) >= self.max_batch:
+                flush()
+        flush()
+        return results

@@ -1,0 +1,15 @@
+from .specs import (
+    LOGICAL_RULES,
+    logical_to_spec,
+    param_specs,
+    shard_ctx,
+    with_logical_constraint,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "logical_to_spec",
+    "param_specs",
+    "shard_ctx",
+    "with_logical_constraint",
+]

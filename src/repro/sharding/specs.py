@@ -1,0 +1,161 @@
+"""Logical-axis sharding: one rule table, resolved against whatever mesh is
+active (single-pod (data, model) or multi-pod (pod, data, model)).
+
+Model code annotates activations with *logical* axis names via
+`with_logical_constraint(x, "batch", "seq", None)`; parameters get logical
+axes from their tree path (`param_specs`).  Rules resolve each logical name
+to the subset of its preferred mesh axes that exist on the active mesh, so
+the same model code runs on 1 CPU device (no mesh -> no-op), one pod, or
+many pods.
+
+Layout summary (DESIGN.md §5):
+  batch          -> (pod, data)     DP/FSDP axis set
+  seq            -> model           Megatron-SP-style sequence sharding for
+                                    attention activations (head-count-free)
+  tp             -> model           FFN hidden / fused q-heads / vocab
+  expert         -> model           MoE expert parallelism
+  fsdp           -> (pod, data)     parameter + optimizer-state sharding
+  kv_seq         -> model           decode KV caches sharded by sequence
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LOGICAL_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "seq": ("model",),
+    "kv_seq": ("model",),
+    "tp": ("model",),
+    "expert": ("model",),
+    "vocab": ("model",),
+}
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def shard_ctx(mesh: Mesh | None, rules: dict[str, tuple[str, ...]] | None = None):
+    """Activate a mesh + rule table for `with_logical_constraint`."""
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules or LOGICAL_RULES) if mesh is not None else None
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Mesh | None:
+    """The mesh activated by shard_ctx (None when unsharded, e.g. CPU tests)."""
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def _resolve(name: str | None, mesh: Mesh, rules) -> Any:
+    if name is None:
+        return None
+    axes = tuple(a for a in rules.get(name, ()) if a in mesh.axis_names)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def logical_to_spec(logical: tuple[str | None, ...], mesh: Mesh, rules=None) -> P:
+    rules = rules or LOGICAL_RULES
+    return P(*(_resolve(nm, mesh, rules) for nm in logical))
+
+
+def with_logical_constraint(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Apply a sharding constraint if a mesh is active; no-op otherwise."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_spec(logical, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding from tree paths
+# ---------------------------------------------------------------------------
+
+# leaf-name -> logical axes for each trailing dim (leading stacked "layers"
+# dims map to None).  2-D weights are (in, out) unless noted.
+_PARAM_AXES: dict[str, tuple[str | None, ...]] = {
+    # embeddings / heads
+    "embedding": ("vocab", "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    "pos_embedding": (None, "fsdp"),
+    # attention (fused head*dim out axis)
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "bq": ("tp",),
+    "bk": ("tp",),
+    "bv": ("tp",),
+    # dense mlp
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # moe (expert axis takes the model mesh axis; inner dims use fsdp --
+    # a mesh axis may appear only once in a PartitionSpec)
+    "router": ("fsdp", None),
+    "e_gate": ("expert", "fsdp", None),
+    "e_up": ("expert", "fsdp", None),
+    "e_down": ("expert", None, "fsdp"),
+    # mamba
+    "in_proj": ("fsdp", "tp"),
+    "x_proj": ("tp", None),
+    "dt_proj": (None, "tp"),
+    "out_proj": ("tp", "fsdp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "A_log": ("tp", None),
+    "D": ("tp",),
+    "dt_bias": ("tp",),
+    # norms / scalars
+    "scale": (None,),
+    "bias": (None,),
+}
+
+
+def _leaf_logical(path: tuple, leaf) -> tuple[str | None, ...]:
+    name = None
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            name = p.key
+            break
+    axes = _PARAM_AXES.get(name)
+    nd = leaf.ndim if hasattr(leaf, "ndim") else 0
+    if axes is None:
+        return (None,) * nd
+    if len(axes) < nd:  # leading stacked-layer dims
+        return (None,) * (nd - len(axes)) + axes
+    if len(axes) > nd:  # e.g. squeezed scalars
+        return axes[-nd:] if nd else ()
+    return axes
+
+
+def param_logical_axes(params) -> Any:
+    """Pytree of logical-axis tuples mirroring `params`."""
+    return jax.tree_util.tree_map_with_path(_leaf_logical, params)
+
+
+def param_specs(params, mesh: Mesh, rules=None) -> Any:
+    """Pytree of PartitionSpecs mirroring `params` (works on shape structs)."""
+    rules = rules or LOGICAL_RULES
+
+    def spec(path, leaf):
+        return logical_to_spec(_leaf_logical(path, leaf), mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(spec, params)

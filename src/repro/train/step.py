@@ -1,0 +1,87 @@
+"""Train step: mixed-precision loss, grad clip, AdamW update.
+
+The same function is lowered by the multi-pod dry-run (full configs,
+ShapeDtypeStructs) and executed by the trainer (small configs, real data).
+Parameters live in fp32 (master copy, FSDP-sharded); the forward runs in
+`compute_dtype` (bf16 by default) via an on-the-fly cast, so XLA keeps the
+bf16 copies transient inside the layer scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.optim import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(key, cfg, *, param_dtype=jnp.float32, opt_dtype=jnp.float32):
+    params = api.init_model(key, cfg, dtype=param_dtype)
+    return TrainState(params=params, opt=adamw_init(params, opt_dtype))
+
+
+def _cast_params(params, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype)
+        if x.dtype == jnp.float32 and x.ndim >= 2
+        else x,
+        params,
+    )
+
+
+def make_train_step(
+    cfg,
+    lr_fn,
+    *,
+    compute_dtype=jnp.bfloat16,
+    clip_norm: float = 1.0,
+    microbatch: int = 0,  # 0 = whole batch at once; else grad accumulation
+):
+    def loss_of(params, batch):
+        loss, metrics = api.loss_fn(_cast_params(params, compute_dtype), batch, cfg)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if not microbatch:
+            return jax.value_and_grad(loss_of, has_aux=True)(params, batch)
+        # microbatched gradient accumulation (PP-style scheduling substrate):
+        # split the batch on the leading axis, scan, average.
+        B = batch["tokens"].shape[0]
+        n_micro = max(1, B // microbatch)
+        micro = jax.tree.map(
+            lambda x: x.reshape((n_micro, microbatch) + x.shape[1:]), batch
+        )
+
+        def step(acc, mb):
+            (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+            acc_g, acc_l = acc
+            return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), m
+
+        zero_g = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        (g_sum, l_sum), ms = jax.lax.scan(step, (zero_g, 0.0), micro)
+        g = jax.tree.map(lambda x: x / n_micro, g_sum)
+        metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
+        return (l_sum / n_micro, metrics), g
+
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = grads_of(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(state.opt.step)
+        new_params, new_opt = adamw_update(grads, state.opt, state.params, lr)
+        out_metrics = {
+            "loss": loss.astype(jnp.float32),
+            "grad_norm": gnorm,
+            "lr": jnp.asarray(lr, jnp.float32),
+            **{k: v.astype(jnp.float32) for k, v in metrics.items()},
+        }
+        return TrainState(new_params, new_opt), out_metrics
+
+    return train_step

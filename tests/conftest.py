@@ -1,0 +1,12 @@
+import os
+import sys
+from pathlib import Path
+
+# Make `repro` importable regardless of how pytest is invoked.
+SRC = Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+# Tests must see the single real CPU device (the 512-device fake platform is
+# dryrun.py-only per the launch contract).  Keep matmul determinism on.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

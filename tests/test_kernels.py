@@ -1,0 +1,155 @@
+"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes.
+All Pallas kernels execute in interpret mode (CPU container; TPU target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.circrun.circrun import circrun_pallas
+from repro.kernels.circrun.ref import circrun_ref
+from repro.kernels.flash_attn.flash_attn import flash_attn_pallas
+from repro.kernels.flash_attn.ref import attn_ref
+from repro.kernels.gather_l2.gather_l2 import gather_dist_pallas
+from repro.kernels.gather_l2.ref import gather_dist_ref
+from repro.kernels.hash_rp.hash_rp import hash_rp_pallas
+from repro.kernels.hash_rp.ref import hash_rp_ref
+from repro.kernels.hash_xp.hash_xp import hash_xp_pallas
+from repro.kernels.hash_xp.ref import hash_xp_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n", [1, 7, 512, 700])
+@pytest.mark.parametrize("m", [8, 24, 64])
+@pytest.mark.parametrize("alpha", [2, 64])
+def test_circrun_sweep(n, m, alpha):
+    h = RNG.integers(0, alpha, (n, m)).astype(np.int32)
+    q = RNG.integers(0, alpha, (m,)).astype(np.int32)
+    got = circrun_pallas(jnp.asarray(h), jnp.asarray(q), block_n=256, interpret=True)
+    want = circrun_ref(jnp.asarray(h), jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_circrun_all_match_row():
+    h = np.tile(np.arange(16, dtype=np.int32), (3, 1))
+    got = circrun_pallas(jnp.asarray(h), jnp.arange(16, dtype=jnp.int32), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), [16, 16, 16])
+
+
+@pytest.mark.parametrize("shape", [(1, 3, 5), (64, 128, 128), (300, 50, 33), (513, 257, 129)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("w", [1.0, 4.0])
+def test_hash_rp_sweep(shape, dtype, w):
+    n, d, m = shape
+    x = RNG.normal(size=(n, d)).astype(dtype)
+    a = RNG.normal(size=(d, m)).astype(np.float32)
+    b = RNG.uniform(0, w, m).astype(np.float32)
+    got = hash_rp_pallas(jnp.asarray(x), jnp.asarray(a), jnp.asarray(b), w=w,
+                         block_n=128, block_m=128, block_d=128, interpret=True)
+    want = hash_rp_ref(jnp.asarray(x, dtype=jnp.float32), jnp.asarray(a), jnp.asarray(b), w=w)
+    # floor() at bucket boundaries can differ by 1 ulp-level float error;
+    # require exact match on >= 99.9% and off-by-one elsewhere
+    g, wv = np.asarray(got), np.asarray(want)
+    diff = np.abs(g - wv)
+    assert (diff <= 1).all()
+    assert (diff == 0).mean() >= 0.999
+
+
+@pytest.mark.parametrize("n,d,dr,m", [(1, 8, 8, 1), (300, 50, 32, 7), (257, 100, 128, 3)])
+def test_hash_xp_sweep(n, d, dr, m):
+    x = RNG.normal(size=(n, d)).astype(np.float32)
+    rot = RNG.normal(size=(m, d, dr)).astype(np.float32)
+    got = hash_xp_pallas(jnp.asarray(x), jnp.asarray(rot), block_n=128, interpret=True)
+    want = hash_xp_ref(jnp.asarray(x), jnp.asarray(rot))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "angular"])
+@pytest.mark.parametrize("B,L,n,d", [(1, 1, 10, 8), (4, 13, 200, 50), (2, 64, 500, 128)])
+def test_gather_l2_sweep(metric, B, L, n, d):
+    data = RNG.normal(size=(n, d)).astype(np.float32)
+    ids = RNG.integers(0, n, (B, L)).astype(np.int32)
+    qs = RNG.normal(size=(B, d)).astype(np.float32)
+    got = gather_dist_pallas(jnp.asarray(data), jnp.asarray(ids), jnp.asarray(qs),
+                             metric=metric, interpret=True)
+    want = gather_dist_ref(jnp.asarray(data), jnp.asarray(ids), jnp.asarray(qs), metric=metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("sq,skv", [(64, 64), (96, 96), (32, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attn_sweep(causal, sq, skv, dtype):
+    dh = 32
+    q = jnp.asarray(RNG.normal(size=(sq, dh)), dtype)
+    k = jnp.asarray(RNG.normal(size=(skv, dh)), dtype)
+    v = jnp.asarray(RNG.normal(size=(skv, dh)), dtype)
+    got = flash_attn_pallas(q, k, v, causal=causal, block_q=32, block_k=32, interpret=True)
+    want = attn_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("window,softcap", [(16, 0.0), (0, 30.0), (8, 20.0)])
+def test_flash_attn_window_softcap(window, softcap):
+    sq = skv = 64
+    dh = 16
+    q = jnp.asarray(RNG.normal(size=(sq, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(skv, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(skv, dh)), jnp.float32)
+    got = flash_attn_pallas(q, k, v, causal=True, window=window, softcap=softcap,
+                            block_q=16, block_k=16, interpret=True)
+    want = attn_ref(q, k, v, causal=True, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attn_gqa_wrapper():
+    from repro.kernels import flash_attention
+
+    B, S, Hq, Hkv, dh = 2, 48, 8, 2, 16
+    q = jnp.asarray(RNG.normal(size=(B, S, Hq, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, dh)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True)
+    want = flash_attention(q, k, v, causal=True, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("L,D,N", [(8, 16, 4), (64, 40, 16), (128, 512, 16)])
+def test_ssm_scan_kernel_sweep(L, D, N):
+    """Fused selective-scan kernel vs the sequential oracle."""
+    from repro.kernels.ssm_scan.ref import ssm_scan_ref
+    from repro.kernels.ssm_scan.ssm_scan import ssm_scan_pallas
+
+    dt = np.abs(RNG.normal(size=(L, D))).astype(np.float32) * 0.1
+    x = RNG.normal(size=(L, D)).astype(np.float32)
+    Bc = RNG.normal(size=(L, N)).astype(np.float32)
+    Cc = RNG.normal(size=(L, N)).astype(np.float32)
+    A = -np.abs(RNG.normal(size=(D, N))).astype(np.float32)
+    h0 = RNG.normal(size=(D, N)).astype(np.float32)
+    y, h = ssm_scan_pallas(*map(jnp.asarray, (dt, x, Bc, Cc, A, h0)),
+                           block_d=32, interpret=True)
+    y_r, h_r = ssm_scan_ref(*map(jnp.asarray, (dt, x, Bc, Cc, A, h0)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_r), rtol=2e-5, atol=2e-5)
+
+
+def test_ssm_scan_batched_chunked_streaming():
+    """Long sequences stream through the kernel in chunks, carrying h."""
+    from repro.kernels import ssm_scan
+    from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+    B, L, D, N = 2, 96, 24, 8
+    dt = np.abs(RNG.normal(size=(B, L, D))).astype(np.float32) * 0.1
+    x = RNG.normal(size=(B, L, D)).astype(np.float32)
+    Bc = RNG.normal(size=(B, L, N)).astype(np.float32)
+    Cc = RNG.normal(size=(B, L, N)).astype(np.float32)
+    A = -np.abs(RNG.normal(size=(D, N))).astype(np.float32)
+    h0 = np.zeros((B, D, N), np.float32)
+    y, h = ssm_scan(*map(jnp.asarray, (dt, x, Bc, Cc, A, h0)), seq_chunk=32, block_d=16)
+    for b in range(B):
+        y_r, h_r = ssm_scan_ref(*map(jnp.asarray, (dt[b], x[b], Bc[b], Cc[b], A, h0[b])))
+        np.testing.assert_allclose(np.asarray(y[b]), np.asarray(y_r), rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(h[b]), np.asarray(h_r), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,249 @@
+"""Model substrate tests: per-arch smoke (reduced configs), chunked-attention
+vs dense oracle, Mamba-1/2 vs naive sequential recurrence, prefill+decode
+consistency with the training forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import api, lm
+from repro.models.attention import chunked_attention
+from repro.models.ssm import (
+    Mamba1Config,
+    Mamba2Config,
+    _mamba1_scan,
+    init_mamba1,
+    init_mamba2,
+    mamba1_block,
+    mamba2_block,
+)
+
+KEY = jax.random.key(0)
+RNG = np.random.default_rng(0)
+
+
+def _batch_for(sc, B=2, S=24, seed=0):
+    rng = np.random.default_rng(seed)
+    if sc.enc_dec:
+        return {
+            "frames": jnp.asarray(rng.normal(size=(B, sc.n_audio_frames, sc.d_model)), jnp.float32),
+            "tokens": jnp.asarray(rng.integers(0, sc.vocab, (B, S)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, sc.vocab, (B, S)), jnp.int32),
+        }
+    if sc.vlm:
+        return {
+            "tokens": jnp.asarray(rng.integers(0, sc.vocab, (B, S - sc.n_patches)), jnp.int32),
+            "patch_embeds": jnp.asarray(rng.normal(size=(B, sc.n_patches, sc.d_model)), jnp.float32),
+            "labels": jnp.asarray(rng.integers(0, sc.vocab, (B, S)), jnp.int32),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, sc.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, sc.vocab, (B, S)), jnp.int32),
+    }
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_train_step(arch):
+    """Reduced config: one forward + grad step on CPU; shapes + finite."""
+    sc = ARCHS[arch].smoke()
+    params = api.init_model(KEY, sc)
+    batch = _batch_for(sc)
+
+    def loss(p):
+        l, _ = api.loss_fn(p, batch, sc)
+        return l
+
+    l, g = jax.jit(jax.value_and_grad(loss))(params)
+    assert np.isfinite(float(l))
+    gnorm = jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(g)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_serve(arch):
+    """Prefill + 2 decode steps: output shapes + finite logits."""
+    sc = ARCHS[arch].smoke()
+    params = api.init_model(KEY, sc)
+    B, S = 2, 16
+    batch = _batch_for(sc, B=B, S=S)
+    batch.pop("labels")
+    logits, caches = api.prefill(params, batch, sc, max_len=S + sc.n_patches + 8)
+    assert logits.shape == (B, sc.vocab_padded)
+    assert bool(jnp.isfinite(logits).all())
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    for _ in range(2):
+        logits, caches = api.decode_step(params, tok, caches, sc)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen2-7b", "gemma2-9b", "gemma3-1b", "zamba2-7b", "falcon-mamba-7b", "whisper-tiny"]
+)
+def test_decode_matches_forward(arch):
+    """Prefill + decode logits == training forward logits (same tokens)."""
+    sc = ARCHS[arch].smoke()
+    params = api.init_model(KEY, sc)
+    B, S, EXTRA = 2, 12, 3
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, sc.vocab, (B, S + EXTRA)), jnp.int32)
+    if sc.enc_dec:
+        frames = jnp.asarray(rng.normal(size=(B, sc.n_audio_frames, sc.d_model)), jnp.float32)
+        logits, caches = api.prefill(params, {"frames": frames, "tokens": toks[:, :S]}, sc, max_len=S + EXTRA)
+    else:
+        logits, caches = api.prefill(params, {"tokens": toks[:, :S]}, sc, max_len=S + EXTRA)
+    for t in range(EXTRA):
+        logits, caches = api.decode_step(params, toks[:, S + t : S + t + 1], caches, sc)
+    if sc.enc_dec:
+        from repro.models import whisper
+
+        enc = whisper.encode(params, frames, sc)
+        ref = whisper.decode_train(params, toks, enc, sc)[:, -1, :]
+    else:
+        hidden, _ = lm.forward(params, toks, sc, mode="train")
+        ref = lm.unembed(sc, params, hidden)[:, -1, :]
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(ref), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_moe_decode_matches_forward_without_drops():
+    """With capacity high enough for zero drops, MoE serve == train forward."""
+    sc = dataclasses.replace(ARCHS["qwen3-moe-235b-a22b"].smoke(), capacity_factor=16.0)
+    params = api.init_model(KEY, sc)
+    B, S = 2, 12
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, sc.vocab, (B, S + 1)), jnp.int32)
+    _, caches = api.prefill(params, {"tokens": toks[:, :S]}, sc, max_len=S + 1)
+    logits, _ = api.decode_step(params, toks[:, S : S + 1], caches, sc)
+    hidden, _ = lm.forward(params, toks, sc, mode="train")
+    ref = lm.unembed(sc, params, hidden)[:, -1, :]
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref), rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# component oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (8, 0.0), (0, 30.0)])
+@pytest.mark.parametrize("kv_chunk", [4, 16, 64])
+def test_chunked_attention_matches_dense(window, softcap, kv_chunk):
+    B, S, Hq, Hkv, dh = 2, 48, 4, 2, 16
+    q = jnp.asarray(RNG.normal(size=(B, S, Hq, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, Hkv, dh)), jnp.float32)
+    got = chunked_attention(q, k, v, causal=True, window=window, softcap=softcap, kv_chunk=kv_chunk)
+    # dense oracle
+    from repro.kernels.flash_attn.ref import attn_ref
+
+    kr = jnp.repeat(k, Hq // Hkv, axis=2)
+    vr = jnp.repeat(v, Hq // Hkv, axis=2)
+    want = jax.vmap(  # over batch, then heads (axis 1 once batch is stripped)
+        jax.vmap(
+            lambda a, b, c: attn_ref(a, b, c, causal=True, window=window, softcap=softcap),
+            in_axes=1, out_axes=1,
+        )
+    )(q, kr, vr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def _mamba1_naive(dtA, dBx, h0):
+    B, L, Di, N = dtA.shape
+    h = h0
+    hs = []
+    for t in range(L):
+        h = np.exp(dtA[:, t]) * h + dBx[:, t]
+        hs.append(h)
+    return np.stack(hs, axis=1)
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 64])
+def test_mamba1_scan_matches_naive(chunk):
+    B, L, Di, N = 2, 20, 8, 4
+    dtA = -np.abs(RNG.normal(size=(B, L, Di, N))).astype(np.float32)
+    dBx = RNG.normal(size=(B, L, Di, N)).astype(np.float32)
+    h0 = np.zeros((B, Di, N), np.float32)
+    hs, h_fin = _mamba1_scan(jnp.asarray(dtA), jnp.asarray(dBx), jnp.asarray(h0), chunk=chunk)
+    want = _mamba1_naive(dtA, dBx, h0)
+    np.testing.assert_allclose(np.asarray(hs), want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_fin), want[:, -1], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_mamba2_ssd_matches_sequential(chunk):
+    """SSD chunked form == naive per-step recurrence of the same block."""
+    cfg = Mamba2Config(d_model=16, d_inner=32, d_state=8, head_dim=8)
+    p = init_mamba2(jax.random.key(1), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 16, 16)), jnp.float32)
+    y_chunked = mamba2_block(p, x, cfg, chunk=chunk)
+    y_step = mamba2_block(p, x, cfg, chunk=1)
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_step), rtol=2e-4, atol=2e-4)
+
+
+def test_mamba1_block_streaming_equivalence():
+    """Processing a sequence in two halves through the cache == one shot."""
+    cfg = Mamba1Config(d_model=16, d_inner=32, d_state=4, dt_rank=8)
+    p = init_mamba1(jax.random.key(2), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 16, 16)), jnp.float32)
+    full = mamba1_block(p, x, cfg, chunk=4)
+    out1, cache = mamba1_block(p, x[:, :8], cfg, return_cache=True, chunk=4)
+    out2, _ = mamba1_block(p, x[:, 8:], cfg, cache=cache, return_cache=True, chunk=4)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([out1, out2], axis=1)), np.asarray(full),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_vlm_splice_positions():
+    from repro.models.vlm import mrope_positions
+
+    pos = mrope_positions(2, 9, 5)
+    assert pos.shape == (2, 14, 3)
+    # patches: t=0, h/w grid; text: all streams equal, continuing at n_patches
+    assert (np.asarray(pos[0, :9, 0]) == 0).all()
+    np.testing.assert_array_equal(np.asarray(pos[0, 9:, 0]), np.arange(9, 14))
+    np.testing.assert_array_equal(np.asarray(pos[0, 9:, 1]), np.arange(9, 14))
+
+
+def test_param_counts_full_configs():
+    """Full-config parameter counts match the published model sizes (counted
+    analytically from shapes -- no allocation)."""
+    import math
+
+    def count(cfg):
+        params = jax.eval_shape(lambda k: api.init_model(k, cfg), jax.random.key(0))
+        return sum(math.prod(x.shape) for x in jax.tree.leaves(params))
+
+    checks = {
+        "qwen2-7b": (7.0e9, 8.5e9),
+        "gemma-2b": (2.0e9, 3.2e9),
+        "gemma2-9b": (8.5e9, 11.0e9),
+        "falcon-mamba-7b": (6.5e9, 8.0e9),
+        # 5.6B with the spec'd dims; real zamba2-7b adds per-block LoRA
+        # adapters on the shared block which the spec omits
+        "zamba2-7b": (5.0e9, 8.5e9),
+        "qwen3-moe-235b-a22b": (2.1e11, 2.5e11),
+        "llama4-maverick-400b-a17b": (3.6e11, 4.4e11),
+        "whisper-tiny": (2.0e7, 6.0e7),
+    }
+    for arch, (lo, hi) in checks.items():
+        n = count(ARCHS[arch])
+        assert lo <= n <= hi, f"{arch}: {n:,} outside [{lo:,.0f}, {hi:,.0f}]"
+
+
+@pytest.mark.parametrize("chunk", [4, 16])
+def test_mamba1_fused_matches_naive_path(chunk):
+    """§Perf falcon-mamba it.1: the fused-chunk scan (no (B,L,Di,N)
+    materialisation) is numerically identical to the naive path."""
+    from repro.models.ssm import Mamba1Config, init_mamba1, mamba1_block
+
+    cfg = Mamba1Config(d_model=16, d_inner=32, d_state=4, dt_rank=8)
+    p = init_mamba1(jax.random.key(5), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 24, 16)), jnp.float32)
+    naive = mamba1_block(p, x, cfg, chunk=chunk, fused=False)
+    fused = mamba1_block(p, x, cfg, chunk=chunk, fused=True)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(naive), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,53 @@
+"""End-to-end system behaviour: train -> embed -> index -> serve, with
+fault tolerance in the loop."""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import ARCHS
+from repro.data import DataPipeline, lm_token_batches
+from repro.models import api
+from repro.serve import RetrievalEngine
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_train_then_serve_roundtrip(tmp_path):
+    """The full production path: train a (reduced) backbone with
+    checkpointing, restore it, build an LCCS index over its embeddings,
+    serve batched requests, and find the planted neighbours."""
+    cfg = ARCHS["gemma-2b"].smoke()
+    pipe = DataPipeline(lm_token_batches(vocab=cfg.vocab, seed=0),
+                        global_batch=4, seq_len=32)
+    trainer = Trainer(cfg, pipe, TrainerConfig(
+        steps=30, ckpt_every=10, ckpt_dir=str(tmp_path), log_every=10, warmup=5,
+    ))
+    out = trainer.run()
+    assert out["final_step"] == 30
+    assert out["final_loss"] < out["history"][0]["loss"]  # it learned
+
+    # restore the trained params from the checkpoint (fault-tolerance path)
+    params = trainer.init_or_restore()[0].params
+
+    engine = RetrievalEngine(cfg, params, m=32, metric="angular", max_batch=16)
+    rng = np.random.default_rng(0)
+    corpus, _ = lm_token_batches(vocab=cfg.vocab, seed=1)(0, 128, 32)
+    engine.build_index(corpus)
+    picks = rng.integers(0, 128, 32)
+    ids, dists = engine.serve_batch(corpus[picks], k=5, lam=48)
+    hits = sum(int(picks[i] in ids[i]) for i in range(len(picks)))
+    assert hits >= 29, f"self-retrieval {hits}/32"
+    assert np.isfinite(dists[ids >= 0]).all()
+
+
+def test_serve_stream_microbatching():
+    cfg = ARCHS["gemma-2b"].smoke()
+    params = api.init_model(jax.random.key(0), cfg)
+    engine = RetrievalEngine(cfg, params, m=16, metric="angular", max_batch=8)
+    corpus, _ = lm_token_batches(vocab=cfg.vocab, seed=2)(0, 64, 16)
+    engine.build_index(corpus)
+    requests = [corpus[i] for i in range(20)]
+    results = engine.serve_stream(requests, k=3, lam=16)
+    assert len(results) == 20
+    assert engine.stats.batches == 3  # 8 + 8 + 4
+    hits = sum(int(i in results[i][0]) for i in range(20))
+    assert hits >= 18
