@@ -7,12 +7,13 @@ from .common import CsvRows, dataset, ground_truth, recall, timed
 def run(csv: CsvRows, n=8000, m=32):
     X, Q, angular = dataset("sift-like", n=n)
     gt, _ = ground_truth(X, Q, 10, angular)
-    from repro.core import LCCSIndex
+    from repro.core import LCCSIndex, SearchParams
 
     idx = LCCSIndex.build(X, m=m, family="euclidean", w=16.0, seed=0)
     rows = []
     for probes in (1, m + 1, 2 * m + 1, 4 * m + 1):
-        (ids, _), t = timed(idx.query, Q, k=10, lam=100, probes=probes, repeats=2)
+        params = SearchParams.from_legacy(k=10, lam=100, probes=probes)
+        (ids, _), t = timed(idx.search, Q, params, repeats=2)
         rows.append((probes, recall(ids, gt), t / Q.shape[0]))
         csv.add(f"fig10/p{probes}", t / Q.shape[0], f"recall={rows[-1][1]:.3f}")
     return rows

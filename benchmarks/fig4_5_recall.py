@@ -10,23 +10,22 @@ from .common import CsvRows, dataset, ground_truth, overall_ratio, recall, timed
 
 
 def _sweep_lccs(X, Q, gt, gt_d, angular, probes_list=(1,), m=64, csv=None, tag=""):
-    from repro.core import LCCSIndex
+    from repro.core import LCCSIndex, SearchParams
 
     fam = "angular" if angular else "euclidean"
     w = 16.0  # tuned to the synthetic data scale (paper fine-tunes w, fn.11)
     def _build():
         idx = LCCSIndex.build(X, m=m, family=fam, w=w, seed=0)
         import jax
-        jax.block_until_ready(idx.csa.I)  # dataclass isn't a pytree
+        jax.block_until_ready(idx)  # index is a pytree: block on all leaves
         return idx
 
     idx, t_build = timed(_build, repeats=1)
     pts = []
     for probes in probes_list:
         for lam in (20, 50, 100, 200, 400):
-            (ids, dists), t = timed(
-                idx.query, Q, k=10, lam=lam, probes=probes, repeats=2
-            )
+            params = SearchParams.from_legacy(k=10, lam=lam, probes=probes)
+            (ids, dists), t = timed(idx.search, Q, params, repeats=2)
             r = recall(np.asarray(ids), gt)
             pts.append((r, t / Q.shape[0], lam, probes,
                         overall_ratio(dists, gt_d, angular)))

@@ -12,13 +12,13 @@ def run(csv: CsvRows, n=8000, target=0.5):
     gt, _ = ground_truth(X, Q, 10, angular)
     rows = []
 
-    from repro.core import LCCSIndex
+    from repro.core import LCCSIndex, SearchParams
 
     for m in (16, 32, 64, 128):
         def _build(m=m):
             idx = LCCSIndex.build(X, m=m, family="euclidean", w=16.0, seed=0)
             import jax
-            jax.block_until_ready(idx.csa.I)
+            jax.block_until_ready(idx)
             return idx
 
         idx, t_build = timed(_build, repeats=1)
@@ -27,7 +27,8 @@ def run(csv: CsvRows, n=8000, target=0.5):
         best_t = None
         for probes in (1, 9):
             for lam in (20, 50, 100, 200, 400):
-                (ids, _), t = timed(idx.query, Q, k=10, lam=lam, probes=probes, repeats=2)
+                params = SearchParams.from_legacy(k=10, lam=lam, probes=probes)
+                (ids, _), t = timed(idx.search, Q, params, repeats=2)
                 if recall(ids, gt) >= target and (best_t is None or t < best_t):
                     best_t = t
         rows.append(("lccs", m, size, t_build, best_t))

@@ -8,13 +8,14 @@ from .common import CsvRows, dataset, ground_truth, overall_ratio, recall, timed
 
 def run(csv: CsvRows, n=8000):
     X, Q, angular = dataset("sift-like", n=n)
-    from repro.core import LCCSIndex
+    from repro.core import LCCSIndex, SearchParams
 
     idx = LCCSIndex.build(X, m=64, family="euclidean", w=16.0, seed=0)
     rows = []
     for k in (1, 2, 5, 10, 20, 50, 100):
         gt, gt_d = ground_truth(X, Q, k, angular)
-        (ids, dists), t = timed(idx.query, Q, k=k, lam=max(200, 2 * k), repeats=2)
+        params = SearchParams(k=k, lam=max(200, 2 * k))
+        (ids, dists), t = timed(idx.search, Q, params, repeats=2)
         r = recall(ids, gt)
         ratio = overall_ratio(dists, gt_d, angular)
         rows.append((k, r, ratio, t / Q.shape[0]))

@@ -7,13 +7,13 @@ from .common import CsvRows, dataset, ground_truth, recall, timed
 def run(csv: CsvRows, n=8000):
     X, Q, angular = dataset("sift-like", n=n)
     gt, _ = ground_truth(X, Q, 10, angular)
-    from repro.core import LCCSIndex
+    from repro.core import LCCSIndex, SearchParams
 
     rows = []
     for m in (8, 16, 32, 64, 128, 256):
         idx = LCCSIndex.build(X, m=m, family="euclidean", w=16.0, seed=0)
         for lam in (50, 200):
-            (ids, _), t = timed(idx.query, Q, k=10, lam=lam, repeats=2)
+            (ids, _), t = timed(idx.search, Q, SearchParams(k=10, lam=lam), repeats=2)
             rows.append((m, lam, recall(ids, gt), t / Q.shape[0]))
         csv.add(f"fig9/m{m}", rows[-1][3], f"recall={rows[-1][2]:.3f}")
     return rows

@@ -12,20 +12,21 @@ from .common import CsvRows, dataset, ground_truth, timed
 
 def run(csv: CsvRows):
     from repro.baselines import C2LSH, LinearScan
-    from repro.core import LCCSIndex
+    from repro.core import LCCSIndex, SearchParams
 
     ns = (2000, 4000, 8000, 16000)
     rows = {"lccs": [], "c2lsh": [], "linear": []}
+    params = SearchParams(k=10, lam=100)
     for n in ns:
         X, Q, angular = dataset("sift-like", n=n)
         def _build():
             idx = LCCSIndex.build(X, m=32, family="euclidean", w=16.0, seed=0)
             import jax
-            jax.block_until_ready(idx.csa.I)
+            jax.block_until_ready(idx)
             return idx
 
         idx, t_build = timed(_build, repeats=1)
-        _, t = timed(idx.query, Q, k=10, lam=100, repeats=2)
+        _, t = timed(idx.search, Q, params, repeats=2)
         rows["lccs"].append((n, t / Q.shape[0], t_build, idx.index_bytes()))
 
         c2 = C2LSH.build(X, m=32, w=16.0, seed=0)

@@ -1,5 +1,20 @@
-"""Quickstart: build an LCCS-LSH index, run c-k-ANNS, compare single- vs
-multi-probe and the search modes.
+"""Quickstart: build an LCCS-LSH index and run c-k-ANNS with the jit-first
+search API.
+
+Three ideas to take away:
+
+  1. `SearchParams` is the single, frozen, hashable bundle of query-phase
+     knobs.  It is a *static* jit argument: one compilation per
+     (params, shapes), then every call is a single compiled computation.
+  2. `LCCSIndex` is a registered JAX pytree -- `index.search` / `jit_search`
+     trace the whole hash -> candidates -> verify path, and the index can be
+     `jax.device_put` / sharded like any other JAX value.
+  3. Candidate generation is pluggable: sources are picked by name from a
+     registry ("bruteforce", "lccs", "multiprobe-full", "multiprobe-skip"),
+     and `register_source` adds new backends without touching LCCSIndex.
+
+The old kwargs API (`index.query(Q, k=10, lam=200, probes=17)`) still works
+but is deprecated; it forwards to `search` via `SearchParams.from_legacy`.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,9 +24,10 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
+import jax
 import numpy as np
 
-from repro.core import LCCSIndex
+from repro.core import LCCSIndex, SearchParams, available_sources
 from repro.data.synthetic import clustered_vectors, queries_from
 
 
@@ -36,21 +52,33 @@ def main():
             for i in range(len(gt))
         ])
 
-    for mode in ("parallel", "narrowed", "bruteforce"):
+    # one SearchParams per configuration; index.search jits end to end
+    print(f"registered candidate sources: {', '.join(available_sources())}")
+    for source in ("lccs", "bruteforce"):
+        params = SearchParams(k=k, lam=200, source=source)
+        jax.block_until_ready(index.search(Q, params))  # warm up the jit cache
         t0 = time.time()
-        ids, dists = index.query(Q, k=k, lam=200, mode=mode)
+        ids, dists = index.search(Q, params)
+        jax.block_until_ready(dists)  # async dispatch: block to time the work
         dt = (time.time() - t0) / len(Q)
-        print(f"mode={mode:10s} recall@{k}={recall(ids):.3f} "
+        print(f"source={source:16s} recall@{k}={recall(ids):.3f} "
               f"query={dt*1e3:.2f} ms")
 
-    for probes in (1, 17, 65):
-        ids, _ = index.query(Q, k=k, lam=200, probes=probes)
-        print(f"probes={probes:3d}      recall@{k}={recall(ids):.3f}")
+    # the narrowed (paper Corollary 3.2) walk is a mode of the lccs source
+    ids, _ = index.search(Q, SearchParams(k=k, lam=200, mode="narrowed"))
+    print(f"mode=narrowed          recall@{k}={recall(ids):.3f}")
+
+    # multiprobe sources share the same static params object
+    for probes in (17, 65):
+        params = SearchParams(k=k, lam=200, source="multiprobe-skip",
+                              probes=probes)
+        ids, _ = index.search(Q, params)
+        print(f"probes={probes:3d}             recall@{k}={recall(ids):.3f}")
 
     p = Path("/tmp/lccs_quickstart.idx")
     index.save(p)
     index2 = LCCSIndex.load(p)
-    ids2, _ = index2.query(Q, k=k, lam=200)
+    ids2, _ = index2.search(Q, SearchParams(k=k, lam=200))
     print(f"save/load roundtrip OK (recall {recall(ids2):.3f})")
 
 

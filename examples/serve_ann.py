@@ -15,6 +15,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS
+from repro.core import SearchParams
 from repro.data.synthetic import lm_token_batches
 from repro.models import api
 from repro.serve import RetrievalEngine
@@ -46,7 +47,7 @@ def main():
     requests = [corpus[i] for i in picks]
 
     t0 = time.time()
-    results = engine.serve_stream(requests, k=5, lam=64)
+    results = engine.serve_stream(requests, SearchParams(k=5, lam=64))
     wall = time.time() - t0
     hits = sum(int(picks[i] in ids) for i, (ids, _) in enumerate(results))
     s = engine.stats

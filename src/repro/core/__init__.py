@@ -1,6 +1,24 @@
-"""LCCS-LSH core: the paper's contribution as a composable JAX module."""
+"""LCCS-LSH core: the paper's contribution as a composable JAX module.
+
+Canonical query API: `LCCSIndex` (a registered pytree) + `SearchParams` (a
+frozen static config) + the candidate-source registry (`sources`).  The full
+hash -> candidates -> verify path compiles as one `jax.jit` computation via
+`jit_search`.
+"""
 from .csa import CSA, build_csa, build_csa_oracle, lccs_length_oracle
-from .index import LCCSIndex, verify_candidates
+from .params import SearchParams
+from .sources import (
+    CandidateSource,
+    available_sources,
+    get_source,
+    register_source,
+)
+from .index import (
+    LCCSIndex,
+    jit_candidates,
+    jit_search,
+    verify_candidates,
+)
 from .lsh import (
     BitSamplingLSH,
     CrossPolytopeLSH,
@@ -15,6 +33,13 @@ from . import multiprobe, theory
 __all__ = [
     "CSA",
     "LCCSIndex",
+    "SearchParams",
+    "CandidateSource",
+    "available_sources",
+    "get_source",
+    "register_source",
+    "jit_candidates",
+    "jit_search",
     "BitSamplingLSH",
     "CrossPolytopeLSH",
     "RandomProjectionLSH",

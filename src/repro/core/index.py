@@ -1,16 +1,49 @@
-"""LCCSIndex -- the public API of the paper's scheme.
+"""LCCSIndex -- the public API of the paper's scheme, jit-first.
 
 Indexing phase (§4.1): hash every object with m i.i.d. LSH functions into a
-hash string; build the CSA.  Query phase: lambda-LCCS search for candidates,
-verify true distances, return the nearest k.
+hash string; build the CSA.  Query phase: a *candidate source* proposes
+lambda candidates (lambda-LCCS search, multiprobe variants, or brute force),
+true distances are verified, and the nearest k are returned.
 
-MP-LCCS-LSH (§4.2): `probes > 1` generates Algorithm-3 perturbation vectors
-on host, batches the probe strings, searches them all on device, and merges
-candidates before verification.
+The search API has three pieces (see also `repro.core.params` and
+`repro.core.sources`):
+
+  * `SearchParams` -- a frozen, hashable dataclass holding every query-phase
+    knob (k, lam, source, mode, width, probes, metric, ...).  It is the single
+    static argument threaded through core, serve, launch, benchmarks, and
+    examples.
+  * `LCCSIndex` is a registered JAX pytree (as are `CSA` and all LSH
+    families): an index is a first-class JAX value that can be passed through
+    `jax.jit`, `jax.device_put`, and sharding APIs.  `jit_search` compiles the
+    entire hash -> candidates -> verify path once per (params, shapes).
+  * Candidate sources are selected by name from a registry
+    ("bruteforce" | "lccs" | "multiprobe-full" | "multiprobe-skip"); new
+    backends plug in via `repro.core.sources.register_source` without
+    touching this class.
+
+Canonical usage::
+
+    from repro.core import LCCSIndex, SearchParams
+
+    index = LCCSIndex.build(X, m=64, family="euclidean", w=4.0)
+    params = SearchParams(k=10, lam=200, source="multiprobe-skip", probes=17)
+    ids, dists = index.search(Q, params)          # jitted end to end
+
+    # or functionally, e.g. to control jit/donation/sharding yourself:
+    from repro.core.index import search, jit_search
+    ids, dists = jit_search(index, Q, params)
+
+Deprecation note: the seed-era kwargs API ``index.query(Q, k=, lam=, width=,
+mode=, probes=)`` and ``index.candidates(Q, lam, ...)`` still work as thin
+shims that map the kwargs onto a `SearchParams` via
+`SearchParams.from_legacy` (mode="bruteforce" becomes source="bruteforce";
+probes>1 selects a multiprobe source).  They emit `DeprecationWarning` and
+will be removed once external callers migrate.
 """
 from __future__ import annotations
 
 import pickle
+import warnings
 from dataclasses import dataclass
 from functools import partial
 from pathlib import Path
@@ -21,10 +54,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import lsh as lsh_mod
-from . import multiprobe
-from .bruteforce import bruteforce_topk
 from .csa import CSA, build_csa
-from .search import klccs_search
+from .params import SearchParams
+from .sources import get_source
 
 
 @partial(jax.jit, static_argnames=("k", "metric"))
@@ -53,10 +85,10 @@ def verify_candidates(
 
 @dataclass
 class LCCSIndex:
-    family: Any  # LSH family (lsh.py)
+    family: Any  # LSH family (lsh.py) -- itself a pytree
     data: jax.Array  # (n, d) original vectors
     h: jax.Array  # (n, m) int32 hash strings
-    csa: CSA | None  # None for mode="bruteforce"-only indexes
+    csa: CSA | None  # None for bruteforce-only indexes
     metric: str
 
     # -- construction -------------------------------------------------------
@@ -93,140 +125,37 @@ class LCCSIndex:
             tot += self.csa.I.size * 4 + self.csa.P.size * 4 + self.csa.Hd.size * 4
         return tot
 
-    # -- candidate generation ----------------------------------------------
+    # -- search (canonical API) ---------------------------------------------
 
-    def candidates(
-        self,
-        queries: jax.Array,
-        lam: int,
-        *,
-        width: int | None = None,
-        mode: str = "parallel",
-        probes: int = 1,
-    ):
-        """lambda-LCCS search.  Returns (ids, lcps): (B, lam) each."""
-        queries = jnp.asarray(queries, dtype=jnp.float32)
-        qh = self.family.hash(queries)
-        if mode == "bruteforce":
-            return bruteforce_topk(self.h, qh, lam)
-        if self.csa is None:
-            raise ValueError("index built without CSA; use mode='bruteforce'")
-        width = width if width is not None else max(4, min(lam, 64))
-        if probes <= 1:
-            return klccs_search(self.csa, qh, lam, width=width, mode=mode)
-        if mode == "parallel":  # §4.2 skip-unaffected-positions (default)
-            return self._multiprobe_skip(queries, qh, lam, width, probes)
-        return self._multiprobe_full(queries, qh, lam, width, probes, mode)
+    def search(self, queries, params: SearchParams | None = None):
+        """c-k-ANNS: candidate generation + true-distance verification,
+        jit-compiled end to end.  Returns (ids (B, k), dists (B, k))."""
+        return jit_search(self, jnp.asarray(queries, dtype=jnp.float32),
+                          params or SearchParams())
 
-    def _probe_deltas(self, queries, qh_np, probes):
-        out = []
-        for b in range(qh_np.shape[0]):
-            vals, scores = self.family.query_alternatives(np.asarray(queries[b]))
-            deltas = multiprobe.generate_perturbations(scores, probes)
-            out.append((vals, deltas))
-        return out
+    # -- legacy kwargs shims (deprecated) -----------------------------------
 
-    def _multiprobe_full(self, queries, qh, lam, width, probes, mode):
-        """Every probe searches all m shifts (baseline MP path)."""
-        qh_np = np.asarray(qh)
-        all_probe_strings = []
-        for b, (vals, deltas) in enumerate(self._probe_deltas(queries, qh_np, probes)):
-            all_probe_strings.append(
-                multiprobe.apply_perturbations(qh_np[b], vals, deltas)
-            )
-        flat = jnp.asarray(np.concatenate(all_probe_strings, axis=0))  # (B*P, m)
-        ids, lcps = klccs_search(self.csa, flat, lam, width=width, mode=mode)
-        B = qh_np.shape[0]
-        ids = ids.reshape(B, -1)
-        lcps = lcps.reshape(B, -1)
-        from .search import dedupe_topk
-
-        return jax.vmap(lambda i, l: dedupe_topk(i, l, lam))(ids, lcps)
-
-    def _multiprobe_skip(self, queries, qh, lam, width, probes):
-        """Paper §4.2 'skip unaffected positions': a probe that modifies
-        positions P need only re-search shifts i whose base-query LCP window
-        [i, i + maxlen_i] covers some p in P -- every other shift provably
-        reproduces the base query's candidates, which the merge already
-        contains (the base search runs in full).  The (probe, shift) worklist
-        is padded and searched as one batched device call."""
-        from .search import dedupe_topk, klccs_search_pairs, klccs_search_with_lens
-
-        m = self.m
-        qh_np = np.asarray(qh)
-        B = qh_np.shape[0]
-        base_ids, base_lcps, maxlen = klccs_search_with_lens(
-            self.csa, qh, lam, width=width
+    def query(self, queries, k: int = 10, lam: int = 100, **kw):
+        """Deprecated: use `search(queries, SearchParams(...))`."""
+        warnings.warn(
+            "LCCSIndex.query(k=, lam=, ...) is deprecated; use "
+            "LCCSIndex.search(queries, SearchParams(...))",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        maxlen = np.asarray(maxlen)  # (B, m)
+        return self.search(queries, SearchParams.from_legacy(k=k, lam=lam, **kw))
 
-        pair_rows, pair_shifts, pair_owner = [], [], []
-        for b, (vals, deltas) in enumerate(self._probe_deltas(queries, qh_np, probes)):
-            strings = multiprobe.apply_perturbations(qh_np[b], vals, deltas)
-            for j, delta in enumerate(deltas):
-                if not delta:
-                    continue  # probe 0 == base query
-                mods = np.array([p for p, _ in delta])
-                # affected shifts: (p - i) mod m <= maxlen_i (+1 slack)
-                i_arr = np.arange(m)
-                dist = (mods[None, :] - i_arr[:, None]) % m  # (m, #mods)
-                affected = (dist <= np.minimum(maxlen[b] + 1, m - 1)[:, None]).any(1)
-                for i in np.nonzero(affected)[0]:
-                    pair_rows.append(strings[j])
-                    pair_shifts.append(i)
-                    pair_owner.append(b)
-        if pair_rows:
-            R = len(pair_rows)
-            R_pad = 1 << (R - 1).bit_length()  # pad to pow2: few jit variants
-            rows = np.zeros((R_pad, m), np.int32)
-            rows[:R] = np.stack(pair_rows)
-            shifts = np.zeros((R_pad,), np.int32)
-            shifts[:R] = pair_shifts
-            valid = np.zeros((R_pad,), bool)
-            valid[:R] = True
-            p_ids, p_lcps = klccs_search_pairs(
-                self.csa, jnp.asarray(rows), jnp.asarray(shifts),
-                jnp.asarray(valid), width=width,
-            )
-            p_ids, p_lcps = np.asarray(p_ids), np.asarray(p_lcps)
-            owner = np.asarray(pair_owner)
-            merged_ids, merged_lcps = [], []
-            for b in range(B):
-                sel = owner == np.int32(b)
-                extra_i = p_ids[:R][sel].reshape(-1)
-                extra_l = p_lcps[:R][sel].reshape(-1)
-                merged_ids.append(
-                    np.concatenate([np.asarray(base_ids[b]), extra_i])
-                )
-                merged_lcps.append(
-                    np.concatenate([np.asarray(base_lcps[b]), extra_l])
-                )
-            # ragged per-query merges: pad to the max length
-            L = max(len(x) for x in merged_ids)
-            mi = np.full((B, L), -1, np.int32)
-            ml = np.full((B, L), -1, np.int32)
-            for b in range(B):
-                mi[b, : len(merged_ids[b])] = merged_ids[b]
-                ml[b, : len(merged_lcps[b])] = merged_lcps[b]
-            return jax.vmap(lambda i, l: dedupe_topk(i, l, lam))(
-                jnp.asarray(mi), jnp.asarray(ml)
-            )
-        return base_ids, base_lcps
-
-    # -- full c-k-ANNS ------------------------------------------------------
-
-    def query(
-        self,
-        queries: jax.Array,
-        k: int = 10,
-        lam: int = 100,
-        **kw,
-    ):
-        """c-k-ANNS: lambda-LCCS candidates + true-distance verification.
-        Returns (ids (B, k), dists (B, k))."""
-        queries = jnp.asarray(queries, dtype=jnp.float32)
-        ids, _ = self.candidates(queries, lam, **kw)
-        return verify_candidates(self.data, queries, ids, k, self.metric)
+    def candidates(self, queries, lam: int, **kw):
+        """Deprecated: use `repro.core.index.candidates(index, queries,
+        SearchParams(...))`.  Returns (ids, lcps): (B, lam) each."""
+        warnings.warn(
+            "LCCSIndex.candidates(lam, ...) is deprecated; use "
+            "repro.core.index.candidates(index, queries, SearchParams(...))",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        params = SearchParams.from_legacy(lam=lam, **kw)
+        return candidates(self, jnp.asarray(queries, dtype=jnp.float32), params)
 
     # -- persistence ---------------------------------------------------------
 
@@ -270,3 +199,39 @@ class LCCSIndex:
             csa=csa,
             metric=blob["metric"],
         )
+
+
+# An index is a first-class JAX value: arrays (and the family/CSA subtrees)
+# are leaves; the metric string is static aux data.
+jax.tree_util.register_dataclass(
+    LCCSIndex,
+    data_fields=["family", "data", "h", "csa"],
+    meta_fields=["metric"],
+)
+
+
+# ---------------------------------------------------------------------------
+# Functional search API (the jit boundary)
+# ---------------------------------------------------------------------------
+
+
+def candidates(index: LCCSIndex, queries: jax.Array, params: SearchParams):
+    """Candidate generation only: dispatch to the registered source.
+    Returns (ids, lcps): (B, lam) each, -1 padded."""
+    queries = jnp.asarray(queries, dtype=jnp.float32)
+    qh = index.family.hash(queries)
+    return get_source(params.source)(index, queries, qh, params)
+
+
+def search(index: LCCSIndex, queries: jax.Array, params: SearchParams):
+    """Full c-k-ANNS pipeline: hash -> candidate source -> verification.
+    Pure function of a pytree index; `params` must be static under jit."""
+    queries = jnp.asarray(queries, dtype=jnp.float32)
+    ids, _ = candidates(index, queries, params)
+    return verify_candidates(
+        index.data, queries, ids, params.k, params.metric or index.metric
+    )
+
+
+jit_search = jax.jit(search, static_argnames="params")
+jit_candidates = jax.jit(candidates, static_argnames="params")

@@ -4,10 +4,18 @@ LCCS-LSH is LSH-family-independent (paper §2.2/§4): the scheme only consumes
 the (n, m) int32 matrix of hash values.  Each family here provides:
 
   hash(X: (n, d) float) -> (n, m) int32           batched hashing (jit-able)
-  query_alternatives(q: (d,)) -> (vals, scores)    multi-probe alternatives
-      vals:   (m, n_alt) int32  -- alternative hash values per position,
-      scores: (m, n_alt) float  -- ascending penalty per alternative
-                                   (reused by MP-LCCS-LSH, Algorithm 3).
+  alternatives(X: (B, d)) -> (vals, scores)       batched multi-probe
+      vals:   (B, m, n_alt) int32  -- alternative hash values per position,
+      scores: (B, m, n_alt) float  -- ascending penalty per alternative
+                                      (consumed by MP-LCCS-LSH, Algorithm 3).
+      Pure JAX: traced into the jitted multiprobe candidate sources.
+  query_alternatives(q: (d,)) -> (vals, scores)    single-query numpy wrapper
+                                                   around `alternatives`.
+
+All families are registered as JAX pytrees (arrays are children; scalar
+hyper-parameters are static aux data), so a family -- and any `LCCSIndex`
+holding one -- can be passed straight through `jax.jit`, `device_put`, and
+sharding APIs.
 
 Families implemented:
   * RandomProjectionLSH  -- Datar et al. 2004, Euclidean distance (Eq. 1).
@@ -73,25 +81,30 @@ class RandomProjectionLSH:
     def collision_prob(self, tau: float) -> float:
         return theory.rp_collision_prob(tau, self.w)
 
-    def query_alternatives(self, q: np.ndarray, n_alt: int = 4):
-        """Multi-Probe LSH (Lv et al. 2007) alternatives: h +- j, scored by the
-        squared distance of the projection to the corresponding boundary."""
-        proj = np.asarray(self.projections(jnp.asarray(q)[None, :]))[0]  # (m,)
-        h = np.floor(proj / self.w).astype(np.int64)
+    def alternatives(self, x: jax.Array, n_alt: int = 4):
+        """Multi-Probe LSH (Lv et al. 2007) alternatives, batched: h +- j,
+        scored by the squared distance of the projection to the boundary.
+        x: (B, d) -> vals (B, m, n_alt) int32, scores (B, m, n_alt) ascending."""
+        n_alt = max(2, n_alt)
+        proj = self.projections(jnp.asarray(x, dtype=jnp.float32))  # (B, m)
+        h = jnp.floor(proj / self.w)
         f = proj - h * self.w  # in-bucket offset, [0, w)
-        vals, scores = [], []
-        for j in range(1, n_alt // 2 + 1):
-            vals.append(h + j)
-            scores.append(((j - 1) * self.w + (self.w - f)) ** 2)
-            vals.append(h - j)
-            scores.append(((j - 1) * self.w + f) ** 2)
-        vals = np.stack(vals, axis=1)  # (m, n_alt)
-        scores = np.stack(scores, axis=1)
-        order = np.argsort(scores, axis=1, kind="stable")
+        js = jnp.arange(1, n_alt // 2 + 1, dtype=jnp.float32)  # (J,)
+        up = ((js - 1.0) * self.w + (self.w - f[..., None])) ** 2  # (B, m, J)
+        dn = ((js - 1.0) * self.w + f[..., None]) ** 2
+        vals = jnp.stack([h[..., None] + js, h[..., None] - js], axis=-1)
+        scores = jnp.stack([up, dn], axis=-1)
+        vals = vals.reshape(*proj.shape, -1)  # (B, m, 2J): [h+1, h-1, h+2, ...]
+        scores = scores.reshape(*proj.shape, -1)
+        order = jnp.argsort(scores, axis=-1, stable=True)
         return (
-            np.take_along_axis(vals, order, axis=1).astype(np.int32),
-            np.take_along_axis(scores, order, axis=1),
+            jnp.take_along_axis(vals, order, axis=-1).astype(jnp.int32),
+            jnp.take_along_axis(scores, order, axis=-1),
         )
+
+    def query_alternatives(self, q: np.ndarray, n_alt: int = 4):
+        vals, scores = self.alternatives(jnp.asarray(q)[None, :], n_alt)
+        return np.asarray(vals[0]), np.asarray(scores[0])
 
 
 # ---------------------------------------------------------------------------
@@ -169,23 +182,23 @@ class CrossPolytopeLSH:
     def collision_prob(self, tau: float) -> float:
         return theory.xp_collision_prob(tau, self.dr)
 
+    def alternatives(self, x: jax.Array, n_alt: int = 4):
+        """FALCONN-style alternatives, batched: other cross-polytope vertices
+        ranked by margin (|y_top| - |y_j|)^2.
+        x: (B, d) -> vals (B, m, n_alt) int32, scores (B, m, n_alt) ascending."""
+        n_alt = min(n_alt, self.dr - 1)
+        y = self.rotations(jnp.asarray(x, dtype=jnp.float32))  # (B, m, dr)
+        ay = jnp.abs(y)
+        top_vals, top_idx = jax.lax.top_k(ay, n_alt + 1)  # best first
+        idx = top_idx[..., 1:]  # (B, m, n_alt)
+        sgn = jnp.take_along_axis(y, idx, axis=-1) < 0
+        vals = (idx + jnp.where(sgn, self.dr, 0)).astype(jnp.int32)
+        scores = (top_vals[..., :1] - top_vals[..., 1:]) ** 2
+        return vals, scores
+
     def query_alternatives(self, q: np.ndarray, n_alt: int = 4):
-        """FALCONN-style alternatives: other cross-polytope vertices ranked by
-        margin (|y_top| - |y_j|)^2."""
-        y = np.asarray(self.rotations(jnp.asarray(q)[None, :]))[0]  # (m, dr)
-        ay = np.abs(y)
-        order = np.argsort(-ay, axis=1)  # best first
-        top = ay[np.arange(self.m)[:, None], order[:, :1]]  # (m, 1)
-        vals, scores = [], []
-        for j in range(1, n_alt + 1):
-            idx = order[:, j]
-            sgn = y[np.arange(self.m), idx] < 0
-            vals.append(idx + np.where(sgn, self.dr, 0))
-            scores.append((top[:, 0] - ay[np.arange(self.m), idx]) ** 2)
-        return (
-            np.stack(vals, axis=1).astype(np.int32),
-            np.stack(scores, axis=1),
-        )
+        vals, scores = self.alternatives(jnp.asarray(q)[None, :], n_alt)
+        return np.asarray(vals[0]), np.asarray(scores[0])
 
 
 # ---------------------------------------------------------------------------
@@ -217,11 +230,16 @@ class BitSamplingLSH:
         # tau = Hamming distance; p = 1 - tau/d
         return max(0.0, 1.0 - tau / self.d)
 
-    def query_alternatives(self, q: np.ndarray, n_alt: int = 1):
-        qv = np.asarray(q)[np.asarray(self.idx)].astype(np.int32)
-        vals = (1 - qv)[:, None]  # flip the bit
-        scores = np.ones((self.m, 1), dtype=np.float64)
+    def alternatives(self, x: jax.Array, n_alt: int = 1):
+        """Only one alternative per bit: flip it.  x: (B, d) binary."""
+        qv = jnp.asarray(x)[:, self.idx].astype(jnp.int32)  # (B, m)
+        vals = (1 - qv)[..., None]
+        scores = jnp.ones(vals.shape, dtype=jnp.float32)
         return vals, scores
+
+    def query_alternatives(self, q: np.ndarray, n_alt: int = 1):
+        vals, scores = self.alternatives(jnp.asarray(q)[None, :], n_alt)
+        return np.asarray(vals[0]), np.asarray(scores[0])
 
 
 def make_family(kind: str, key: jax.Array, d: int, m: int, **kw):
@@ -239,9 +257,27 @@ def distance(x: jax.Array, y: jax.Array, metric: str) -> jax.Array:
     if metric == "euclidean":
         return jnp.sqrt(jnp.maximum(jnp.sum((x - y) ** 2, axis=-1), 0.0))
     if metric == "angular":
-        xn = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
-        yn = y / jnp.linalg.norm(y, axis=-1, keepdims=True)
+        # clamp norms: a zero vector must yield a finite (maximal) distance,
+        # not NaN-poisoned verification
+        xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+        yn = y / jnp.maximum(jnp.linalg.norm(y, axis=-1, keepdims=True), 1e-12)
         return 1.0 - jnp.sum(xn * yn, axis=-1)  # monotone in angle
     if metric == "hamming":
         return jnp.sum(x != y, axis=-1).astype(jnp.float32)
     raise ValueError(f"unknown metric {metric!r}")
+
+
+# ---------------------------------------------------------------------------
+# Pytree registration: arrays are children, hyper-parameters are static aux.
+# This is what lets jax.jit trace a whole LCCSIndex (which holds a family)
+# and lets indexes be device_put / sharded / donated as first-class values.
+# ---------------------------------------------------------------------------
+
+for _cls, _data, _meta in (
+    (RandomProjectionLSH, ("a", "b"), ("w", "metric")),
+    (CrossPolytopeLSH, ("signs", "rot"), ("d", "dr", "rotation", "metric")),
+    (BitSamplingLSH, ("idx",), ("d", "metric")),
+):
+    jax.tree_util.register_dataclass(
+        _cls, data_fields=list(_data), meta_fields=list(_meta)
+    )

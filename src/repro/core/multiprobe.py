@@ -5,15 +5,27 @@ probes are generated in ascending total-score order via a min-heap with the
 paper's p_shift / p_expand operators and the MAX_GAP constraint on adjacent
 modified positions.
 
-This is per-query control logic (a few hundred heap ops); it runs on host in
-numpy and feeds a *batched* device-side k-LCCS search over the probe strings
-(DESIGN.md §3, assumption change (ii)).
+Two execution forms live here:
+
+  * `generate_perturbations` / `apply_perturbations`: the literal per-query
+    Algorithm 3 (host numpy) -- kept as the reference implementation and for
+    tests.
+  * `probe_schedule` / `probe_strings_batch`: the jit-first form.  The heap
+    runs ONCE per (m, probes, n_alt, max_gap) over *score-ranked position
+    slots* with a canonical score model (the precomputed-probing-sequence
+    optimisation of Lv et al. 2007 §4.4 applied to Algorithm 3).  Per query,
+    slot s maps to the position with the s-th cheapest best alternative, so
+    probing stays query-adaptive while the schedule -- and therefore the whole
+    multiprobe candidate source -- is a static, traceable structure.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
+from functools import lru_cache
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 MAX_GAP = 2  # paper §4.2: "We set MAX_GAP = 2 in practice."
@@ -78,3 +90,74 @@ def probe_positions(probes: list[tuple[tuple[int, int], ...]]) -> list[list[int]
     """Modified positions per probe (for the skip-unaffected-positions
     optimisation of §4.2)."""
     return [[i for i, _ in delta] for delta in probes]
+
+
+# ---------------------------------------------------------------------------
+# Jit-first form: static schedule + batched probe-string materialisation.
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=64)
+def probe_schedule(m: int, n_probes: int, n_alt: int, max_gap: int = MAX_GAP):
+    """Run Algorithm 3 once over score-ranked slots with the canonical score
+    model score(slot s, rank j) = (s + 1) + j * m (cheaper slots and lower
+    alternative ranks first; all rank-j entries are cheaper than any rank-j+1).
+
+    Deliberate deviation from the paper: MAX_GAP here constrains adjacency of
+    *score-rank slots*, not of hash positions -- two slots adjacent in the
+    schedule may map to distant hash positions for a given query (and
+    vice versa).  The paper's positional MAX_GAP is only enforceable with
+    per-query heap runs (`generate_perturbations`, the reference path); the
+    slot form is what makes the schedule query-independent and traceable.
+
+    Returns padded numpy arrays (trace-time constants):
+      slots (P, T) int32   score-rank slot of each perturbation term,
+      ranks (P, T) int32   alternative rank of each term,
+      mask  (P, T) bool    validity of each padded term slot.
+    Probe 0 is always the empty perturbation (the base query).
+    """
+    canon = np.add.outer(
+        np.arange(1, m + 1, dtype=np.float64),
+        np.arange(n_alt, dtype=np.float64) * m,
+    )  # (m, n_alt)
+    deltas = generate_perturbations(canon, n_probes, max_gap)
+    P = len(deltas)
+    T = max((len(d) for d in deltas), default=0) or 1
+    slots = np.zeros((P, T), np.int32)
+    ranks = np.zeros((P, T), np.int32)
+    mask = np.zeros((P, T), bool)
+    for p, delta in enumerate(deltas):
+        for t, (s, r) in enumerate(delta):
+            slots[p, t], ranks[p, t], mask[p, t] = s, r, True
+    return slots, ranks, mask
+
+
+def probe_strings_batch(
+    qh: jax.Array,  # (B, m) int32 base hash strings
+    order: jax.Array,  # (B, m) int32: slot s -> hash position (score-ascending)
+    alt_vals: jax.Array,  # (B, m, A) int32 per-position alternatives
+    slots: np.ndarray,  # (P, T) static schedule
+    ranks: np.ndarray,
+    mask: np.ndarray,
+):
+    """Materialise probe strings for the whole batch in one traced op.
+
+    Returns (strings (B, P, m) int32, pos (B, P, T) int32) where pos holds the
+    actual modified positions per probe (padded entries are masked by `mask`).
+    """
+    m = qh.shape[1]
+    slots_j = jnp.asarray(slots)
+    ranks_j = jnp.asarray(ranks)
+    mask_j = jnp.asarray(mask)
+
+    def one_query(qh_row, order_row, vals_row):
+        pos = order_row[slots_j]  # (P, T) actual positions
+        v = vals_row[pos, ranks_j]  # (P, T) replacement hash values
+        pos_scatter = jnp.where(mask_j, pos, m)  # padded terms scatter OOB
+
+        def one_probe(p, vv):
+            return qh_row.at[p].set(vv, mode="drop")
+
+        return jax.vmap(one_probe)(pos_scatter, v), pos
+
+    return jax.vmap(one_query)(qh, order.astype(jnp.int32), alt_vals)

@@ -1,0 +1,114 @@
+"""SearchParams -- the single static search configuration object.
+
+Every query-phase knob of the LCCS-LSH scheme lives here, replacing the loose
+``k=, lam=, width=, mode=, probes=`` kwarg bundles the seed copy-pasted across
+`serve`, `launch`, `benchmarks`, and `examples`.  The dataclass is frozen and
+hashable, so it is usable directly as a *static* argument to `jax.jit`:
+
+    from repro.core import LCCSIndex, SearchParams, jit_search
+    params = SearchParams(k=10, lam=200, source="multiprobe-skip", probes=17)
+    ids, dists = jit_search(index, queries, params)   # compiles once per
+                                                      # (params, shapes)
+
+Fields
+------
+k            number of neighbours returned after verification.
+lam          lambda: candidate-set size of the lambda-LCCS search (paper §4.1).
+source       candidate-source name from the registry (`repro.core.sources`):
+             "bruteforce" | "lccs" | "multiprobe-full" | "multiprobe-skip".
+mode         inner k-LCCS search mode: "parallel" (vmapped binary searches)
+             or "narrowed" (paper-faithful Corollary 3.2 scan).
+width        window half-width of the k-LCCS search; None = max(4, min(lam, 64)).
+probes       number of MP-LCCS-LSH probes (Algorithm 3); only the multiprobe-*
+             sources look at it.
+metric       distance metric for verification; None = the index's own metric.
+n_alt        alternatives per hash position offered to Algorithm 3.
+max_gap      Algorithm-3 MAX_GAP constraint on adjacent modified slots.
+skip_budget  static cap on re-searched shifts per (query, probe) in the
+             "multiprobe-skip" source.  None = a heuristic cap (16 shifts per
+             perturbation term, clipped to m); set it to m (or larger) for
+             exact §4.2 semantics, or lower to trade recall for speed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class SearchParams:
+    k: int = 10
+    lam: int = 100
+    source: str = "lccs"
+    mode: str = "parallel"
+    width: int | None = None
+    probes: int = 1
+    metric: str | None = None
+    n_alt: int = 4
+    max_gap: int = 2
+    skip_budget: int | None = None
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.lam < 1:
+            raise ValueError(f"lam must be >= 1, got {self.lam}")
+        if self.probes < 1:
+            raise ValueError(f"probes must be >= 1, got {self.probes}")
+        if self.skip_budget is not None and self.skip_budget < 1:
+            raise ValueError(
+                f"skip_budget must be >= 1 or None, got {self.skip_budget} "
+                "(use probes=1 / source='lccs' to disable probing entirely)"
+            )
+        if self.mode not in ("parallel", "narrowed"):
+            raise ValueError(
+                f"mode must be 'parallel' or 'narrowed', got {self.mode!r} "
+                "(bruteforce is a candidate *source* now: source='bruteforce')"
+            )
+
+    # -- derived -------------------------------------------------------------
+
+    def resolved_width(self) -> int:
+        """Window width for the k-LCCS search (seed default preserved)."""
+        return self.width if self.width is not None else max(4, min(self.lam, 64))
+
+    def replace(self, **changes) -> "SearchParams":
+        return dataclasses.replace(self, **changes)
+
+    # -- legacy kwargs bridge ------------------------------------------------
+
+    @classmethod
+    def from_legacy(
+        cls,
+        *,
+        k: int = 10,
+        lam: int = 100,
+        width: int | None = None,
+        mode: str = "parallel",
+        probes: int = 1,
+        metric: str | None = None,
+        **extra,
+    ) -> "SearchParams":
+        """Map the seed's kwarg bundle onto (source, mode).
+
+        mode="bruteforce"            -> source="bruteforce"
+        probes>1, mode="parallel"    -> source="multiprobe-skip"   (§4.2 default)
+        probes>1, other mode         -> source="multiprobe-full"
+        otherwise                    -> source="lccs"
+        """
+        if extra:
+            raise TypeError(f"unknown legacy query kwargs: {sorted(extra)}")
+        skip_budget = None
+        if mode == "bruteforce":
+            source, mode = "bruteforce", "parallel"
+        elif probes > 1:
+            source = "multiprobe-skip" if mode == "parallel" else "multiprobe-full"
+            # the seed searched every affected (probe, shift) pair: preserve
+            # that exact behaviour for legacy callers (clips to m)
+            skip_budget = 1 << 20
+        else:
+            source = "lccs"
+        return cls(
+            k=k, lam=lam, source=source, mode=mode, width=width,
+            probes=probes, metric=metric, skip_budget=skip_budget,
+        )

@@ -1,0 +1,199 @@
+"""Pluggable candidate sources for the lambda-LCCS search phase.
+
+A *candidate source* is any callable implementing the `CandidateSource`
+protocol: it maps (index, queries, query hash strings, params) to a padded
+``(ids (B, lam), lcps (B, lam))`` candidate set.  Sources are selected by
+name through `SearchParams.source`, so new backends (distributed CSA shards,
+spherical filtering variants, learned probers, ...) plug in via
+`register_source` without touching `LCCSIndex`.
+
+Every built-in source is pure JAX on the query path: the whole
+hash -> candidates -> verify pipeline jits as one computation
+(`repro.core.index.jit_search`).
+
+Built-ins:
+  "bruteforce"       dense circular-run scoring of every database string.
+  "lccs"             single-probe lambda-LCCS search over the CSA
+                     (`params.mode` picks the parallel or narrowed walk).
+  "multiprobe-full"  MP-LCCS-LSH: every probe searches all m shifts.
+  "multiprobe-skip"  MP-LCCS-LSH with §4.2 skip-unaffected-positions: probes
+                     only re-search shifts whose base-query LCP window covers
+                     a modified position; `params.skip_budget` caps the
+                     per-(query, probe) shift worklist (None = a heuristic 16
+                     shifts per perturbation term; >= m = exact §4.2).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from . import multiprobe
+from .bruteforce import bruteforce_topk
+from .search import (
+    dedupe_topk,
+    klccs_search,
+    klccs_search_pairs,
+    klccs_search_with_lens,
+)
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .index import LCCSIndex
+    from .params import SearchParams
+
+
+@runtime_checkable
+class CandidateSource(Protocol):
+    def __call__(
+        self,
+        index: "LCCSIndex",
+        queries: jax.Array,  # (B, d) float32
+        qh: jax.Array,  # (B, m) int32 hashed queries
+        params: "SearchParams",
+    ) -> tuple[jax.Array, jax.Array]:  # ids (B, lam), lcps (B, lam)
+        ...
+
+
+_REGISTRY: dict[str, CandidateSource] = {}
+
+
+def register_source(name: str, fn: CandidateSource | None = None):
+    """Register a candidate source under `name` (decorator or direct call).
+    Re-registering a name overwrites it (useful for experimentation)."""
+
+    def deco(f: CandidateSource) -> CandidateSource:
+        _REGISTRY[name] = f
+        return f
+
+    return deco(fn) if fn is not None else deco
+
+
+def get_source(name: str) -> CandidateSource:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown candidate source {name!r}; available: {available_sources()}"
+        ) from None
+
+
+def available_sources() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Built-in sources
+# ---------------------------------------------------------------------------
+
+
+def _require_csa(index, name):
+    if index.csa is None:
+        raise ValueError(
+            f"candidate source {name!r} needs a CSA; this index was built with "
+            "build_csa_structure=False -- use source='bruteforce'"
+        )
+
+
+@register_source("bruteforce")
+def bruteforce_source(index, queries, qh, params):
+    """Exact LCCS scoring of every database string (no CSA required)."""
+    return bruteforce_topk(index.h, qh, params.lam)
+
+
+@register_source("lccs")
+def lccs_source(index, queries, qh, params):
+    """Single-probe lambda-LCCS search (paper Algorithm 2) over the CSA."""
+    _require_csa(index, "lccs")
+    return klccs_search(
+        index.csa, qh, params.lam, width=params.resolved_width(), mode=params.mode
+    )
+
+
+def _probe_batch(index, queries, qh, params):
+    """Shared multiprobe front half: batched alternatives, static Algorithm-3
+    schedule, and one traced probe-string materialisation for the batch."""
+    alt_vals, alt_scores = index.family.alternatives(queries, params.n_alt)
+    n_alt = alt_vals.shape[-1]
+    slots, ranks, mask = multiprobe.probe_schedule(
+        index.m, params.probes, n_alt, params.max_gap
+    )
+    # slot s of the schedule = position with the s-th cheapest best alternative
+    order = jnp.argsort(alt_scores[..., 0], axis=-1)
+    strings, pos = multiprobe.probe_strings_batch(
+        qh, order, alt_vals, slots, ranks, mask
+    )
+    return strings, pos, mask
+
+
+@register_source("multiprobe-full")
+def multiprobe_full_source(index, queries, qh, params):
+    """MP-LCCS-LSH, baseline form: every probe searches all m shifts."""
+    _require_csa(index, "multiprobe-full")
+    if params.probes <= 1:
+        return lccs_source(index, queries, qh, params)
+    width = params.resolved_width()
+    strings, _, _ = _probe_batch(index, queries, qh, params)
+    B, P, m = strings.shape
+    ids, lcps = klccs_search(
+        index.csa, strings.reshape(B * P, m), params.lam, width=width,
+        mode=params.mode,
+    )
+    return jax.vmap(lambda i, l: dedupe_topk(i, l, params.lam))(
+        ids.reshape(B, -1), lcps.reshape(B, -1)
+    )
+
+
+@register_source("multiprobe-skip")
+def multiprobe_skip_source(index, queries, qh, params):
+    """MP-LCCS-LSH with §4.2 skip-unaffected-positions, fully traced.
+
+    The base query searches all shifts (recording per-shift best LCPs).  A
+    probe modifying positions M need only re-search shifts i whose LCP window
+    [i, i + maxlen_i] covers some p in M -- every other shift provably
+    reproduces the base candidates, which the merge already holds.  The
+    per-(query, probe) worklist is compacted to a static `skip_budget` of
+    shifts with top_k over the affected mask and searched as one batched
+    single-shift call."""
+    _require_csa(index, "multiprobe-skip")
+    if params.probes <= 1:
+        return lccs_source(index, queries, qh, params)
+    width = params.resolved_width()
+    base_ids, base_lcps, maxlen = klccs_search_with_lens(
+        index.csa, qh, params.lam, width=width
+    )
+    strings, pos, mask = _probe_batch(index, queries, qh, params)
+    B, P, m = strings.shape
+    shifts_all = jnp.arange(m, dtype=jnp.int32)
+    # affected[b, p, i] <=> some modified position of probe p lies in shift i's
+    # base LCP window: (pos - i) mod m <= min(maxlen_i + 1, m - 1)
+    dist = (pos[:, :, :, None] - shifts_all[None, None, None, :]) % m  # (B,P,T,m)
+    window = jnp.minimum(maxlen + 1, m - 1)  # (B, m)
+    affected = (
+        (dist <= window[:, None, None, :]) & jnp.asarray(mask)[None, :, :, None]
+    ).any(axis=2)  # (B, P, m)
+    affected = affected.at[:, 0, :].set(False)  # probe 0 == base query
+    if params.skip_budget is None:
+        # heuristic static cap: each of the <= T modified positions of a probe
+        # affects a window of maxlen_i + 1 shifts, and base LCP maxima are
+        # short for random-ish strings (Lemma 5.2 EVT tail), so 16 slots per
+        # term covers the affected set in the typical case -- exact at small m,
+        # a real prune at large m where the dense form explodes.  Pass
+        # skip_budget=index.m (or any value >= m) for exact §4.2 semantics.
+        budget = min(m, 16 * mask.shape[1])
+    else:
+        budget = min(params.skip_budget, m)
+    # rank affected shifts by their base LCP window: shifts that already match
+    # long prefixes are where a probe can newly extend a co-substring
+    score = jnp.where(affected, window[:, None, :] + 1, 0)  # (B, P, m)
+    hit, shifts = jax.lax.top_k(score, budget)  # (B, P, S)
+    valid = hit > 0
+    rows = jnp.broadcast_to(
+        strings[:, :, None, :], (B, P, budget, m)
+    ).reshape(-1, m)
+    p_ids, p_lcps = klccs_search_pairs(
+        index.csa, rows, shifts.reshape(-1), valid.reshape(-1), width=width
+    )
+    ids = jnp.concatenate([base_ids, p_ids.reshape(B, -1)], axis=1)
+    lcps = jnp.concatenate([base_lcps, p_lcps.reshape(B, -1)], axis=1)
+    return jax.vmap(lambda i, l: dedupe_topk(i, l, params.lam))(ids, lcps)

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS
+from repro.core import SearchParams, available_sources
 from repro.data.synthetic import lm_token_batches
 from repro.models import api
 from repro.serve import RetrievalEngine
@@ -30,10 +31,19 @@ def main():
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--lam", type=int, default=64)
     ap.add_argument("--probes", type=int, default=1)
+    ap.add_argument("--source", default=None, choices=sorted(available_sources()),
+                    help="candidate source; default: lccs, or multiprobe-skip "
+                         "when --probes > 1")
     ap.add_argument("--m", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
+
+    search_params = SearchParams.from_legacy(
+        k=args.k, lam=args.lam, probes=args.probes
+    )
+    if args.source:
+        search_params = search_params.replace(source=args.source)
 
     cfg = ARCHS[args.arch]
     if args.smoke:
@@ -48,7 +58,8 @@ def main():
             print(f"[launch.serve] restored step {meta['step']} from {args.ckpt_dir}")
 
     engine = RetrievalEngine(cfg, params, m=args.m, metric="angular",
-                             max_batch=args.max_batch)
+                             max_batch=args.max_batch,
+                             search_params=search_params)
     gen = lm_token_batches(vocab=cfg.vocab, seed=0)
     corpus, _ = gen(0, args.corpus, 32)
     t0 = time.time()
@@ -58,9 +69,7 @@ def main():
 
     rng = np.random.default_rng(1)
     picks = rng.integers(0, args.corpus, args.requests)
-    results = engine.serve_stream(
-        [corpus[i] for i in picks], k=args.k, lam=args.lam, probes=args.probes
-    )
+    results = engine.serve_stream([corpus[i] for i in picks])
     hits = sum(int(picks[i] in ids) for i, (ids, _) in enumerate(results))
     s = engine.stats
     print(

@@ -3,20 +3,27 @@ workload with one of the assigned backbones in the loop).
 
   build:  corpus token sequences -> backbone final-hidden mean-pool
           embeddings -> LCCSIndex (hash strings + CSA).
-  serve:  batched requests -> embed -> lambda-LCCS candidates -> verified
-          top-k, with a micro-batching request queue.
+  serve:  batched requests -> embed -> candidate source -> verified top-k,
+          with a micro-batching request queue.
+
+All query-phase knobs arrive as one `SearchParams` (static under jit): the
+engine holds a default, and both the embedding and the whole
+hash -> candidates -> verify pipeline run as compiled computations.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LCCSIndex
+from repro.core import LCCSIndex, SearchParams, jit_search
 from repro.models import lm
+
+DEFAULT_PARAMS = SearchParams(k=5, lam=64)
 
 
 @dataclass
@@ -29,12 +36,14 @@ class ServeStats:
 
 class RetrievalEngine:
     def __init__(self, cfg, params, *, m: int = 64, metric: str = "angular",
-                 max_batch: int = 32):
+                 max_batch: int = 32,
+                 search_params: SearchParams = DEFAULT_PARAMS):
         self.cfg = cfg
         self.params = params
         self.m = m
         self.metric = metric
         self.max_batch = max_batch
+        self.search_params = search_params
         self.index: LCCSIndex | None = None
         self.stats = ServeStats()
         self._embed = jax.jit(self._embed_fn)
@@ -56,14 +65,30 @@ class RetrievalEngine:
         self.index = LCCSIndex.build(emb, m=self.m, family=fam, seed=seed)
         return self.index
 
-    def serve_batch(self, query_tokens: np.ndarray, *, k: int = 5, lam: int = 64,
-                    probes: int = 1):
+    def _resolve_params(self, params, legacy) -> SearchParams:
+        if legacy:
+            warnings.warn(
+                "k=/lam=/probes= kwargs to serve_batch/serve_stream are "
+                "deprecated; pass a SearchParams",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            base = params or self.search_params
+            legacy.setdefault("k", base.k)
+            legacy.setdefault("lam", base.lam)
+            return SearchParams.from_legacy(**legacy)
+        return params or self.search_params
+
+    def serve_batch(self, query_tokens: np.ndarray,
+                    params: SearchParams | None = None, **legacy):
         """One micro-batched serving step.  Returns (ids, dists)."""
         assert self.index is not None, "build_index first"
+        p = self._resolve_params(params, legacy)
         t0 = time.time()
         q_emb = self.embed(query_tokens)
         t1 = time.time()
-        ids, dists = self.index.query(jnp.asarray(q_emb), k=k, lam=lam, probes=probes)
+        ids, dists = jit_search(self.index, jnp.asarray(q_emb), p)
+        jax.block_until_ready(dists)
         t2 = time.time()
         self.stats.requests += query_tokens.shape[0]
         self.stats.batches += 1
@@ -71,9 +96,11 @@ class RetrievalEngine:
         self.stats.search_s += t2 - t1
         return np.asarray(ids), np.asarray(dists)
 
-    def serve_stream(self, requests: list[np.ndarray], **kw):
+    def serve_stream(self, requests: list[np.ndarray],
+                     params: SearchParams | None = None, **legacy):
         """Greedy micro-batching over a request stream (batched requests
         deliverable): coalesce up to max_batch queued requests per step."""
+        p = self._resolve_params(params, legacy)
         results = []
         queue: list[np.ndarray] = []
 
@@ -81,7 +108,7 @@ class RetrievalEngine:
             if not queue:
                 return
             batch = np.stack(queue)
-            ids, dists = self.serve_batch(batch, **kw)
+            ids, dists = self.serve_batch(batch, p)
             results.extend(zip(ids, dists))
             queue.clear()
 

@@ -3,7 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import LCCSIndex
+from repro.core import LCCSIndex, SearchParams
 
 
 def _clustered(rng, n, d, n_centers=20, spread=1.0, scale=5.0):
@@ -34,7 +34,7 @@ def _recall(ids, gt):
 def test_index_recall_euclidean(dataset):
     X, Q, gt = dataset
     idx = LCCSIndex.build(X, m=64, family="euclidean", w=4.0, seed=1)
-    ids, dists = idx.query(Q, k=10, lam=200)
+    ids, dists = idx.search(Q, SearchParams(k=10, lam=200))
     assert _recall(ids, gt) >= 0.6
     # distances must be ascending per row and consistent with ids
     d = np.asarray(dists)
@@ -46,7 +46,7 @@ def test_recall_improves_with_lambda(dataset):
     X, Q, gt = dataset
     idx = LCCSIndex.build(X, m=32, family="euclidean", w=4.0, seed=2)
     r = [
-        _recall(idx.query(Q, k=10, lam=lam)[0], gt)
+        _recall(idx.search(Q, SearchParams(k=10, lam=lam))[0], gt)
         for lam in (10, 50, 400)
     ]
     assert r[0] <= r[1] + 0.05 and r[1] <= r[2] + 0.05
@@ -56,10 +56,12 @@ def test_recall_improves_with_lambda(dataset):
 def test_modes_agree_on_candidate_quality(dataset):
     X, Q, gt = dataset
     idx = LCCSIndex.build(X, m=32, family="euclidean", w=4.0, seed=3)
-    recalls = {
-        mode: _recall(idx.query(Q, k=10, lam=150, mode=mode, width=150 if mode != "bruteforce" else None)[0], gt)
-        for mode in ("parallel", "narrowed", "bruteforce")
+    configs = {
+        "parallel": SearchParams(k=10, lam=150, mode="parallel", width=150),
+        "narrowed": SearchParams(k=10, lam=150, mode="narrowed", width=150),
+        "bruteforce": SearchParams(k=10, lam=150, source="bruteforce"),
     }
+    recalls = {name: _recall(idx.search(Q, p)[0], gt) for name, p in configs.items()}
     # bruteforce is the exact LCCS scorer: it lower-bounds nothing but all
     # three see the same hash strings, so recalls should be within noise
     assert max(recalls.values()) - min(recalls.values()) <= 0.15, recalls
@@ -69,21 +71,72 @@ def test_multiprobe_recall_at_small_m(dataset):
     """MP-LCCS-LSH claim: probing recovers recall when m (index size) is small."""
     X, Q, gt = dataset
     idx = LCCSIndex.build(X, m=16, family="euclidean", w=4.0, seed=4)
-    r1 = _recall(idx.query(Q, k=10, lam=100, probes=1)[0], gt)
-    r17 = _recall(idx.query(Q, k=10, lam=100, probes=17)[0], gt)
+    r1 = _recall(idx.search(Q, SearchParams(k=10, lam=100))[0], gt)
+    r17 = _recall(
+        idx.search(Q, SearchParams(k=10, lam=100, source="multiprobe-skip",
+                                   probes=17))[0],
+        gt,
+    )
     assert r17 >= r1 - 0.02  # must not hurt; usually helps
 
 
 def test_save_load_roundtrip(tmp_path, dataset):
     X, Q, gt = dataset
     idx = LCCSIndex.build(X[:500], m=16, family="euclidean", w=4.0, seed=5)
-    ids0, d0 = idx.query(Q, k=5, lam=50)
+    params = SearchParams(k=5, lam=50)
+    ids0, d0 = idx.search(Q, params)
     p = tmp_path / "index.pkl"
     idx.save(p)
     idx2 = LCCSIndex.load(p)
-    ids1, d1 = idx2.query(Q, k=5, lam=50)
+    ids1, d1 = idx2.search(Q, params)
     np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
     np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "family,kw,make_data",
+    [
+        ("euclidean", dict(w=4.0), "gauss"),
+        ("angular", dict(rotation="pseudo"), "unit"),
+        ("angular", dict(rotation="gaussian"), "unit"),  # rot is not None
+        ("hamming", dict(), "bits"),
+    ],
+)
+def test_save_load_roundtrip_all_families(tmp_path, family, kw, make_data):
+    """save/load must reproduce identical query results for every LSH family,
+    including the dense-rotation cross-polytope variant."""
+    rng = np.random.default_rng(11)
+    X = rng.normal(size=(400, 16)).astype(np.float32)
+    if make_data == "unit":
+        X /= np.linalg.norm(X, axis=1, keepdims=True)
+    elif make_data == "bits":
+        X = (X > 0).astype(np.float32)
+    Q = X[:8]
+    idx = LCCSIndex.build(X, m=16, family=family, seed=3, **kw)
+    if family == "angular" and kw.get("rotation") == "gaussian":
+        assert idx.family.rot is not None
+    params = SearchParams(k=5, lam=40, source="multiprobe-skip", probes=5)
+    ids0, d0 = idx.search(Q, params)
+    path = tmp_path / "idx.pkl"
+    idx.save(path)
+    idx2 = LCCSIndex.load(path)
+    assert type(idx2.family) is type(idx.family)
+    ids1, d1 = idx2.search(Q, params)
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-6)
+
+
+def test_legacy_query_shim_matches_new_api(dataset):
+    """Deprecated kwargs API must keep working and agree with SearchParams."""
+    X, Q, gt = dataset
+    idx = LCCSIndex.build(X[:500], m=16, family="euclidean", w=4.0, seed=5)
+    with pytest.deprecated_call():
+        ids_old, d_old = idx.query(Q, k=5, lam=50, probes=9)
+    ids_new, d_new = idx.search(
+        Q, SearchParams(k=5, lam=50, probes=9, source="multiprobe-skip")
+    )
+    np.testing.assert_array_equal(np.asarray(ids_old), np.asarray(ids_new))
+    np.testing.assert_allclose(np.asarray(d_old), np.asarray(d_new), rtol=1e-6)
 
 
 def test_index_bytes_linear_in_m():
@@ -115,7 +168,7 @@ def test_theorem51_quality_guarantee():
         p2 = theory.rp_collision_prob(c * R, w)
         lam = min(n, theory.theorem51_lambda(m, n, p1, p2))
         idx = LCCSIndex.build(Xt, m=m, family="euclidean", w=w, seed=t)
-        ids, dists = idx.query(q, k=1, lam=lam)
+        ids, dists = idx.search(q, SearchParams(k=1, lam=lam))
         if np.asarray(dists)[0, 0] <= c * np.linalg.norm(planted - q[0]):
             hits += 1
     assert hits / trials >= 0.25, f"success rate {hits/trials} below Theorem 5.1 bound"
@@ -125,17 +178,15 @@ def test_multiprobe_skip_matches_full(dataset):
     """§4.2 skip-unaffected-positions: the pruned probe search returns the
     same candidate quality as full per-probe search (unaffected shifts
     provably reproduce base candidates, which the merge already holds)."""
-    import jax.numpy as jnp
+    from repro.core import SearchParams, jit_search
 
     X, Q, gt = dataset
     idx = LCCSIndex.build(X, m=32, family="euclidean", w=4.0, seed=7)
-    qh = idx.family.hash(jnp.asarray(Q))
-    ids_full, _ = idx._multiprobe_full(jnp.asarray(Q), qh, 150, 32, 17, "parallel")
-    ids_skip, _ = idx._multiprobe_skip(jnp.asarray(Q), qh, 150, 32, 17)
+    common = dict(k=10, lam=150, width=32, probes=17)
     r_full = _recall(
-        __import__("repro.core.index", fromlist=["verify_candidates"]).verify_candidates(
-            idx.data, jnp.asarray(Q), ids_full, 10, "euclidean")[0], gt)
+        jit_search(idx, Q, SearchParams(source="multiprobe-full", **common))[0], gt
+    )
     r_skip = _recall(
-        __import__("repro.core.index", fromlist=["verify_candidates"]).verify_candidates(
-            idx.data, jnp.asarray(Q), ids_skip, 10, "euclidean")[0], gt)
+        jit_search(idx, Q, SearchParams(source="multiprobe-skip", **common))[0], gt
+    )
     assert r_skip >= r_full - 0.02, (r_skip, r_full)

@@ -5,6 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="dev dependency (pip install -e .[dev]); "
+    "property tests are skipped on minimal environments"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import make_family, theory

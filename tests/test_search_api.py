@@ -1,0 +1,205 @@
+"""Jit-first search API: SearchParams staticness, pytree registration of the
+index and families, candidate-source registry, and jit/eager equivalence of
+the full query path for every built-in source."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CSA,
+    LCCSIndex,
+    SearchParams,
+    available_sources,
+    get_source,
+    jit_search,
+    make_family,
+    register_source,
+)
+from repro.core.index import search
+from repro.core.lsh import distance
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(12, 24)) * 5.0
+    X = (centers[rng.integers(0, 12, 1200)]
+         + rng.normal(size=(1200, 24))).astype(np.float32)
+    Q = X[:12] + rng.normal(size=(12, 24)).astype(np.float32) * 0.05
+    idx = LCCSIndex.build(X, m=16, family="euclidean", w=4.0, seed=1)
+    return idx, jnp.asarray(Q)
+
+
+# -- SearchParams --------------------------------------------------------------
+
+
+def test_searchparams_frozen_hashable():
+    p = SearchParams(k=5, lam=64, source="multiprobe-skip", probes=9)
+    assert hash(p) == hash(SearchParams(k=5, lam=64, source="multiprobe-skip",
+                                        probes=9))
+    assert {p: 1}[p] == 1  # usable as a dict/jit-cache key
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p.k = 7
+    assert p.replace(lam=128).lam == 128 and p.lam == 64
+
+
+def test_searchparams_validation():
+    with pytest.raises(ValueError):
+        SearchParams(k=0)
+    with pytest.raises(ValueError):
+        SearchParams(mode="bruteforce")  # now a source, not a mode
+    with pytest.raises(TypeError):
+        SearchParams.from_legacy(k=5, bogus=1)
+
+
+def test_searchparams_from_legacy_mapping():
+    assert SearchParams.from_legacy(mode="bruteforce").source == "bruteforce"
+    assert SearchParams.from_legacy(probes=9).source == "multiprobe-skip"
+    assert SearchParams.from_legacy(probes=9, mode="narrowed").source == "multiprobe-full"
+    assert SearchParams.from_legacy().source == "lccs"
+    assert SearchParams(lam=200).resolved_width() == 64  # seed default preserved
+    assert SearchParams(lam=200, width=10).resolved_width() == 10
+
+
+# -- pytree registration -------------------------------------------------------
+
+
+def test_index_is_pytree(small_index):
+    idx, _ = small_index
+    leaves, treedef = jax.tree_util.tree_flatten(idx)
+    assert len(leaves) >= 6  # family arrays + data + h + 3 CSA arrays
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(rebuilt, LCCSIndex)
+    assert rebuilt.metric == idx.metric
+    np.testing.assert_array_equal(np.asarray(rebuilt.h), np.asarray(idx.h))
+    # device_put of a whole index works (first-class JAX value)
+    moved = jax.device_put(idx)
+    assert isinstance(moved.csa, CSA)
+
+
+@pytest.mark.parametrize("family,kw", [
+    ("euclidean", dict(w=4.0)),
+    ("angular", dict(rotation="pseudo")),
+    ("angular", dict(rotation="gaussian")),
+    ("hamming", dict()),
+])
+def test_families_are_pytrees(family, kw):
+    fam = make_family(family, jax.random.key(0), 16, 8, **kw)
+    leaves, treedef = jax.tree_util.tree_flatten(fam)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert type(rebuilt) is type(fam)
+    X = np.random.default_rng(0).random((4, 16)).astype(np.float32)
+    if family == "hamming":
+        X = (X > 0.5).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(fam.hash(jnp.asarray(X))),
+        np.asarray(rebuilt.hash(jnp.asarray(X))),
+    )
+
+
+# -- registry ------------------------------------------------------------------
+
+
+def test_registry_has_builtin_sources():
+    assert {"bruteforce", "lccs", "multiprobe-full", "multiprobe-skip"} <= set(
+        available_sources()
+    )
+
+
+def test_unknown_source_raises_helpfully(small_index):
+    idx, Q = small_index
+    with pytest.raises(KeyError, match="available"):
+        search(idx, Q, SearchParams(source="no-such-source"))
+
+
+def test_register_custom_source(small_index):
+    idx, Q = small_index
+
+    def half_bruteforce(index, queries, qh, params):
+        # toy backend: exact scoring of the first half of the database
+        from repro.core import bruteforce_topk
+
+        return bruteforce_topk(index.h[: index.n // 2], qh, params.lam)
+
+    register_source("test-half", half_bruteforce)
+    try:
+        assert get_source("test-half") is half_bruteforce
+        ids, dists = jit_search(idx, Q, SearchParams(k=5, lam=32,
+                                                     source="test-half"))
+        assert (np.asarray(ids) < idx.n // 2).all()
+        assert np.isfinite(np.asarray(dists)).all()
+    finally:
+        from repro.core import sources
+
+        sources._REGISTRY.pop("test-half", None)
+
+
+# -- jit/eager equivalence over every source -----------------------------------
+
+
+@pytest.mark.parametrize("source", ["bruteforce", "lccs", "multiprobe-full",
+                                    "multiprobe-skip"])
+def test_jit_matches_eager(small_index, source):
+    idx, Q = small_index
+    params = SearchParams(k=5, lam=64, source=source, probes=9)
+    ids_e, d_e = search(idx, Q, params)
+    ids_j, d_j = jit_search(idx, Q, params)
+    np.testing.assert_array_equal(np.asarray(ids_e), np.asarray(ids_j))
+    np.testing.assert_allclose(np.asarray(d_e), np.asarray(d_j),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_jit_search_on_device_put_index(small_index):
+    """A device_put index pytree searches identically to the original."""
+    idx, Q = small_index
+    params = SearchParams(k=5, lam=64)
+    ids0, _ = jit_search(idx, Q, params)
+    ids1, _ = jit_search(jax.device_put(idx), Q, params)
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+
+
+def test_skip_budget_caps_work(small_index):
+    """skip_budget >= m is exact §4.2 (clipped to m, so m and 2m agree);
+    the default heuristic and small explicit budgets must stay valid."""
+    idx, Q = small_index
+    base = SearchParams(k=5, lam=64, source="multiprobe-skip", probes=9)
+    ids_m, d_m = jit_search(idx, Q, base.replace(skip_budget=idx.m))
+    ids_2m, d_2m = jit_search(idx, Q, base.replace(skip_budget=2 * idx.m))
+    np.testing.assert_array_equal(np.asarray(ids_m), np.asarray(ids_2m))
+    np.testing.assert_allclose(np.asarray(d_m), np.asarray(d_2m), rtol=1e-6)
+
+    with pytest.raises(ValueError):
+        base.replace(skip_budget=0)
+
+    for p in (base, base.replace(skip_budget=4)):  # heuristic default + capped
+        ids_c, d_c = jit_search(idx, Q, p)
+        ids_c, d_c = np.asarray(ids_c), np.asarray(d_c)
+        assert ((ids_c >= -1) & (ids_c < idx.n)).all()
+        assert np.isfinite(d_c[ids_c >= 0]).all()
+        assert (np.diff(d_c, axis=1) >= -1e-5).all()  # ascending per row
+
+
+# -- NaN regression (satellite) ------------------------------------------------
+
+
+def test_angular_distance_zero_vector_is_finite():
+    z = jnp.zeros((3, 8))
+    y = jnp.ones((3, 8))
+    assert np.isfinite(np.asarray(distance(z, y, "angular"))).all()
+    assert np.isfinite(np.asarray(distance(z, z, "angular"))).all()
+
+
+def test_angular_search_zero_query_no_nan():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(300, 16)).astype(np.float32)
+    X /= np.linalg.norm(X, axis=1, keepdims=True)
+    X[7] = 0.0  # zero vector in the database must not poison verification
+    idx = LCCSIndex.build(X, m=8, family="angular", seed=0)
+    Q = np.zeros((2, 16), np.float32)  # zero queries
+    ids, dists = jit_search(idx, Q, SearchParams(k=5, lam=32))
+    d = np.asarray(dists)
+    assert np.isfinite(d[np.asarray(ids) >= 0]).all()
+    assert not np.isnan(d).any()

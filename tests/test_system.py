@@ -5,6 +5,7 @@ import jax
 import pytest
 
 from repro.configs import ARCHS
+from repro.core import SearchParams
 from repro.data import DataPipeline, lm_token_batches
 from repro.models import api
 from repro.serve import RetrievalEngine
@@ -33,7 +34,7 @@ def test_train_then_serve_roundtrip(tmp_path):
     corpus, _ = lm_token_batches(vocab=cfg.vocab, seed=1)(0, 128, 32)
     engine.build_index(corpus)
     picks = rng.integers(0, 128, 32)
-    ids, dists = engine.serve_batch(corpus[picks], k=5, lam=48)
+    ids, dists = engine.serve_batch(corpus[picks], SearchParams(k=5, lam=48))
     hits = sum(int(picks[i] in ids[i]) for i in range(len(picks)))
     assert hits >= 29, f"self-retrieval {hits}/32"
     assert np.isfinite(dists[ids >= 0]).all()
@@ -46,7 +47,7 @@ def test_serve_stream_microbatching():
     corpus, _ = lm_token_batches(vocab=cfg.vocab, seed=2)(0, 64, 16)
     engine.build_index(corpus)
     requests = [corpus[i] for i in range(20)]
-    results = engine.serve_stream(requests, k=3, lam=16)
+    results = engine.serve_stream(requests, SearchParams(k=3, lam=16))
     assert len(results) == 20
     assert engine.stats.batches == 3  # 8 + 8 + 4
     hits = sum(int(i in results[i][0]) for i in range(20))
