@@ -1,0 +1,109 @@
+"""Beyond-paper Figure 11: recall + QPS under a churn workload.
+
+Workload: start from an indexed corpus, then stream rounds of
+insert / delete / query mixes.  Two contenders:
+
+  * "segmented"  SegmentedLCCSIndex -- O(batch) buffer inserts, tombstone
+                 deletes, size-tiered compaction every `compact_every` rounds.
+  * "rebuild"    full LCCSIndex.build of the live corpus after every round
+                 (the only option the paper's build-once index offers).
+
+Reported per contender: mean recall@k over the churned corpus, query
+throughput (QPS, jit-compiled steady state), and total update wall time.
+
+    PYTHONPATH=src python -m benchmarks.fig11_dynamic
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import CsvRows, dataset, recall, timed
+
+
+def _live_ground_truth(store, live_gids, Q, k):
+    X = store[live_gids]
+    d = np.sqrt(np.maximum(((Q[:, None, :] - X[None, :, :]) ** 2).sum(-1), 0))
+    return live_gids[np.argsort(d, axis=1, kind="stable")[:, :k]]
+
+
+def run(csv: CsvRows, n=4000, rounds=8, batch=200, k=10, m=32,
+        compact_every=4, seed=0):
+    import jax
+
+    from repro.core import LCCSIndex, SearchParams, SegmentedLCCSIndex
+
+    X0, Q, _ = dataset("sift-like", n=n, seed=seed)
+    rng = np.random.default_rng(seed + 7)
+    d = X0.shape[1]
+    params = SearchParams(k=k, lam=200)
+
+    # one shared churn script so both contenders see identical state
+    all_vecs = [X0]
+    script = []
+    n_ids = n
+    live = list(range(n))
+    for r in range(rounds):
+        ins = rng.normal(size=(batch, d)).astype(np.float32) * 4.0
+        all_vecs.append(ins)
+        dels = rng.choice(live, size=batch // 2, replace=False)
+        script.append((ins, np.asarray(dels, np.int64),
+                       np.arange(n_ids, n_ids + batch)))
+        live = sorted((set(live) | set(range(n_ids, n_ids + batch))) - set(dels))
+        n_ids += batch
+    store = np.concatenate(all_vecs)
+    live_gids = np.asarray(live)
+    gt = _live_ground_truth(store, live_gids, Q, k)
+
+    # -- segmented ----------------------------------------------------------
+    seg = SegmentedLCCSIndex.build(X0, m=m, family="euclidean", w=16.0, seed=0)
+    t0 = time.perf_counter()
+    for r, (ins, dels, _) in enumerate(script):
+        seg.insert(ins)
+        seg.delete(dels)
+        if (r + 1) % compact_every == 0:
+            seg.compact()
+    t_seg_update = time.perf_counter() - t0
+    (ids, _), t_q = timed(seg.search, Q, params, repeats=3)
+    r_seg = recall(ids, gt)
+    qps_seg = Q.shape[0] / t_q
+    csv.add("fig11/segmented_query", t_q / Q.shape[0],
+            f"recall={r_seg:.3f} update_s={t_seg_update:.2f} "
+            f"segments={seg.segment_sizes()} buffer={seg.buffer_count}")
+
+    # -- full rebuild -------------------------------------------------------
+    t0 = time.perf_counter()
+    alive = np.zeros(n_ids, bool)
+    alive[:n] = True
+    reb = None
+    for ins, dels, gids in script:
+        alive[gids] = True
+        alive[dels] = False
+        lg = alive.nonzero()[0]
+        reb = LCCSIndex.build(store[lg], m=m, family="euclidean", w=16.0, seed=0)
+    jax.block_until_ready(reb.csa.I)
+    t_reb_update = time.perf_counter() - t0
+    lg = alive.nonzero()[0]
+    (ids, _), t_q = timed(reb.search, Q, params, repeats=3)
+    ids = np.where(np.asarray(ids) >= 0, lg[np.maximum(np.asarray(ids), 0)], -1)
+    r_reb = recall(ids, gt)
+    qps_reb = Q.shape[0] / t_q
+    csv.add("fig11/rebuild_query", t_q / Q.shape[0],
+            f"recall={r_reb:.3f} update_s={t_reb_update:.2f}")
+
+    print(f"fig11: churn {rounds}x(+{batch}/-{batch//2}) over n={n}: "
+          f"segmented recall={r_seg:.3f} qps={qps_seg:.0f} "
+          f"update={t_seg_update:.2f}s | rebuild recall={r_reb:.3f} "
+          f"qps={qps_reb:.0f} update={t_reb_update:.2f}s "
+          f"({t_reb_update / max(t_seg_update, 1e-9):.1f}x slower updates)")
+    return {
+        "segmented": (r_seg, qps_seg, t_seg_update),
+        "rebuild": (r_reb, qps_reb, t_reb_update),
+    }
+
+
+if __name__ == "__main__":
+    csv = CsvRows()
+    run(csv)
+    csv.dump()

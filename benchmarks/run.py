@@ -17,7 +17,7 @@ def main() -> None:
     csv = CsvRows()
     t0 = time.time()
     from . import fig4_5_recall, fig6_7_indexing, fig8_k, fig9_m, fig10_probes
-    from . import kernel_bench, table1_scaling
+    from . import fig11_dynamic, kernel_bench, table1_scaling
 
     print("# fig4/5: query time vs recall (Euclidean + Angular)", flush=True)
     fig4_5_recall.run(csv, n=n)
@@ -29,6 +29,8 @@ def main() -> None:
     fig9_m.run(csv, n=n)
     print("# fig10: impact of #probes", flush=True)
     fig10_probes.run(csv, n=n)
+    print("# fig11: dynamic churn (segmented vs full rebuild)", flush=True)
+    fig11_dynamic.run(csv, n=n // 2)
     print("# table1: complexity scaling in n", flush=True)
     table1_scaling.run(csv)
     print("# kernels", flush=True)

@@ -28,11 +28,15 @@ from .lsh import (
 )
 from .bruteforce import bruteforce_topk, circ_run_lengths
 from .search import klccs_search
+# importing .segments registers the "segmented" candidate source
+from .segments import Segment, SegmentedLCCSIndex
 from . import multiprobe, theory
 
 __all__ = [
     "CSA",
     "LCCSIndex",
+    "Segment",
+    "SegmentedLCCSIndex",
     "SearchParams",
     "CandidateSource",
     "available_sources",

@@ -39,6 +39,11 @@ shims that map the kwargs onto a `SearchParams` via
 `SearchParams.from_legacy` (mode="bruteforce" becomes source="bruteforce";
 probes>1 selects a multiprobe source).  They emit `DeprecationWarning` and
 will be removed once external callers migrate.
+
+Mutable corpora: `LCCSIndex` is build-once (a corpus change means a full
+O(nm log n) rebuild).  If the corpus takes online inserts/deletes, use
+`repro.core.segments.SegmentedLCCSIndex` -- same SearchParams / jit_search
+pipeline over an LSM-style stack of CSA segments plus a delta buffer.
 """
 from __future__ import annotations
 
@@ -85,6 +90,13 @@ def verify_candidates(
 
 @dataclass
 class LCCSIndex:
+    """Static (build-once) LCCS-LSH index: hash strings + CSA snapshot.
+
+    Any corpus change requires a full rebuild; for online insert/delete use
+    `repro.core.segments.SegmentedLCCSIndex`, which serves the same
+    SearchParams/jit_search pipeline over CSA segments plus a delta buffer.
+    """
+
     family: Any  # LSH family (lsh.py) -- itself a pytree
     data: jax.Array  # (n, d) original vectors
     h: jax.Array  # (n, m) int32 hash strings

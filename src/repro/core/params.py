@@ -28,6 +28,10 @@ skip_budget  static cap on re-searched shifts per (query, probe) in the
              "multiprobe-skip" source.  None = a heuristic cap (16 shifts per
              perturbation term, clipped to m); set it to m (or larger) for
              exact §4.2 semantics, or lower to trade recall for speed.
+inner        per-segment candidate source run by the "segmented" source
+             (`repro.core.segments.SegmentedLCCSIndex`); ignored by every
+             other source.  `SegmentedLCCSIndex.search` sets it for you by
+             rewriting source=<name> to (source="segmented", inner=<name>).
 """
 from __future__ import annotations
 
@@ -47,8 +51,14 @@ class SearchParams:
     n_alt: int = 4
     max_gap: int = 2
     skip_budget: int | None = None
+    inner: str = "lccs"
 
     def __post_init__(self):
+        if self.inner == "segmented":
+            raise ValueError(
+                "inner='segmented' would recurse; pick a per-segment source "
+                "such as 'lccs', 'bruteforce', or 'multiprobe-skip'"
+            )
         if self.k < 1:
             raise ValueError(f"k must be >= 1, got {self.k}")
         if self.lam < 1:

@@ -1,0 +1,442 @@
+"""Segmented dynamic LCCS index: online insert/delete over an LSM-style
+segment stack (beyond-paper; the paper's indexing phase §4.1 is build-once).
+
+Why this shape: LCCS candidate scoring is pointwise per object, so per-segment
+top-lambda candidate sets merge *exactly* (the same property
+`core.distributed` exploits across shards).  That makes a mutable corpus an
+LSM problem, not an algorithm problem:
+
+  * a small append-only *delta buffer* holds the newest hash strings and is
+    scored brute-force with `circ_run_lengths` (exact LCCS lengths; the dense
+    sweep beats pointer-chasing at buffer scale),
+  * a stack of immutable CSA *segments* (each built with the existing
+    `build_csa`) answers lambda-LCCS searches via any registered candidate
+    source, sharing ONE LSH family so hash strings are comparable everywhere,
+  * a *tombstone* mask over global ids makes `delete` an O(batch) bit-flip;
+    dead rows are filtered at candidate time, and their hash strings are
+    physically dropped at the next compaction (the vector *store* is
+    global-id addressed, so its rows are only reclaimed by `vacuum()`,
+    which renumbers ids),
+  * `compact()` is a size-tiered merge (LSM level merge): the buffer plus
+    every segment smaller than the running merge total is rebuilt into one
+    new CSA segment -- O(n_merged * m log n_merged), amortised, instead of a
+    full O(nm log n) rebuild per batch.
+
+Jit story: `SegmentedLCCSIndex` is a registered pytree and the `"segmented"`
+candidate source is pure JAX, so `jit_search(index, Q, params)` compiles the
+whole multi-segment pipeline as one computation.  Segment sizes and the
+buffer capacity are padded to a power-of-two schedule, so the jit cache sees
+a handful of shapes: inserts and deletes mutate leaves (cache hit), only a
+capacity growth or a compaction changes the treedef (retrace).
+
+Usage::
+
+    from repro.core import SegmentedLCCSIndex, SearchParams
+
+    index = SegmentedLCCSIndex.create(d=128, m=64, family="euclidean", w=4.0)
+    ids = index.insert(X0)                  # global ids, O(batch)
+    index.delete(ids[:10])                  # tombstones, O(batch)
+    index.compact()                         # size-tiered merge -> CSA segment
+    out_ids, dists = index.search(Q, SearchParams(k=10, lam=200))
+
+`params.source` names the *per-segment* source ("lccs", "bruteforce",
+"multiprobe-*"); `search` rewrites it to the registered "segmented" source
+with `inner=<source>`.  Static corpora should keep using `LCCSIndex`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import lsh as lsh_mod
+from .bruteforce import circ_run_lengths
+from .csa import CSA, build_csa
+from .index import LCCSIndex
+from .params import SearchParams
+from .search import dedupe_topk
+from .sources import get_source, register_source
+
+_PAD_HASH = np.iinfo(np.int32).max  # sentinel hash value for padded rows
+_MIN_CAP = 8
+
+
+def _pow2_at_least(x: int) -> int:
+    return max(_MIN_CAP, 1 << max(0, int(x) - 1).bit_length())
+
+
+@dataclass
+class Segment:
+    """One immutable CSA segment.  Rows are padded to a power-of-two size
+    with sentinel hash strings (gid = -1); padded rows sort past every real
+    string and are masked out of the merged candidate set by gid."""
+
+    h: jax.Array  # (cap_i, m) int32, sentinel-padded
+    csa: CSA
+    gid: jax.Array  # (cap_i,) int32 global ids, -1 on padded rows
+
+    @property
+    def cap(self) -> int:
+        return self.h.shape[0]
+
+    @staticmethod
+    def build(h_rows: np.ndarray, gids: np.ndarray) -> "Segment":
+        n, m = h_rows.shape
+        cap = _pow2_at_least(n)
+        h = np.full((cap, m), _PAD_HASH, np.int32)
+        h[:n] = h_rows
+        g = np.full((cap,), -1, np.int32)
+        g[:n] = gids
+        hj = jnp.asarray(h)
+        return Segment(h=hj, csa=build_csa(hj), gid=jnp.asarray(g))
+
+
+jax.tree_util.register_dataclass(
+    Segment, data_fields=["h", "csa", "gid"], meta_fields=[]
+)
+
+
+@dataclass
+class SegmentedLCCSIndex:
+    """Dynamic LCCS-LSH index: CSA segments + delta buffer + tombstones.
+
+    Pytree fields (traced under jit):
+      family    shared LSH family (itself a pytree)
+      store     (cap_n, d) all vectors ever inserted, indexed by global id
+      alive     (cap_n,) bool tombstone mask (False = deleted or unallocated)
+      segments  tuple of immutable `Segment`s
+      buf_h     (cap_b, m) delta-buffer hash strings, sentinel-padded
+      buf_gid   (cap_b,) delta-buffer global ids, -1 on free slots
+      n_alloc   () int32: number of allocated global ids
+      buf_fill  () int32: used delta-buffer slots
+
+    The two scalar counters are pytree leaves (not host attributes) so a
+    flatten/unflatten round trip -- `jax.device_put`, sharding -- yields an
+    index that is still safe to mutate.
+    """
+
+    family: Any
+    store: jax.Array
+    alive: jax.Array
+    segments: tuple[Segment, ...]
+    buf_h: jax.Array
+    buf_gid: jax.Array
+    n_alloc: jax.Array
+    buf_fill: jax.Array
+    metric: str
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def create(
+        d: int,
+        *,
+        m: int = 64,
+        family: str = "euclidean",
+        seed: int = 0,
+        **family_kw,
+    ) -> "SegmentedLCCSIndex":
+        """An empty dynamic index over R^d (same family construction --
+        and therefore the same hash functions -- as `LCCSIndex.build`)."""
+        fam = lsh_mod.make_family(family, jax.random.key(seed), d, m, **family_kw)
+        return SegmentedLCCSIndex(
+            family=fam,
+            store=jnp.zeros((_MIN_CAP, d), jnp.float32),
+            alive=jnp.zeros((_MIN_CAP,), bool),
+            segments=(),
+            buf_h=jnp.full((_MIN_CAP, m), _PAD_HASH, jnp.int32),
+            buf_gid=jnp.full((_MIN_CAP,), -1, jnp.int32),
+            n_alloc=jnp.int32(0),
+            buf_fill=jnp.int32(0),
+            metric=fam.metric,
+        )
+
+    @staticmethod
+    def build(
+        data,
+        *,
+        m: int = 64,
+        family: str = "euclidean",
+        seed: int = 0,
+        compact: bool = True,
+        **family_kw,
+    ) -> "SegmentedLCCSIndex":
+        """Bulk-load: create + insert; `compact=True` immediately rolls the
+        buffer into one CSA segment (the static-index layout)."""
+        data = np.asarray(data, np.float32)
+        idx = SegmentedLCCSIndex.create(
+            data.shape[1], m=m, family=family, seed=seed, **family_kw
+        )
+        idx.insert(data)
+        if compact:
+            idx.compact(full=True)
+        return idx
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def data(self) -> jax.Array:
+        """Global-id-indexed vector store (what verification gathers from)."""
+        return self.store
+
+    @property
+    def d(self) -> int:
+        return self.store.shape[1]
+
+    @property
+    def m(self) -> int:
+        return self.buf_h.shape[1]
+
+    @property
+    def n_ids(self) -> int:
+        return int(self.n_alloc)
+
+    @property
+    def n_live(self) -> int:
+        return int(np.asarray(self.alive).sum())
+
+    @property
+    def buffer_count(self) -> int:
+        return int(self.buf_fill)
+
+    def segment_sizes(self) -> list[int]:
+        """Live row count per segment (largest first by construction)."""
+        alive = np.asarray(self.alive)
+        return [
+            int(alive[g[g >= 0]].sum())
+            for g in (np.asarray(s.gid) for s in self.segments)
+        ]
+
+    def index_bytes(self) -> int:
+        tot = self.buf_h.size * 4
+        for s in self.segments:
+            tot += s.h.size * 4 + s.csa.I.size * 4 + s.csa.P.size * 4 + s.csa.Hd.size * 4
+        return tot
+
+    # -- mutation (host-side, O(batch) on the buffer) ------------------------
+
+    def insert(self, X) -> np.ndarray:
+        """Append a batch of vectors; returns their assigned global ids.
+        O(batch) buffer appends -- no CSA work until `compact()`."""
+        X = jnp.asarray(X, jnp.float32)
+        if X.ndim == 1:
+            X = X[None, :]
+        b = X.shape[0]
+        if b == 0:
+            return np.zeros((0,), np.int32)
+        h = self.family.hash(X)
+        n_ids, fill = self.n_ids, self.buffer_count
+        gids = np.arange(n_ids, n_ids + b, dtype=np.int32)
+        self._grow_store(n_ids + b)
+        rows = jnp.asarray(gids)
+        self.store = self.store.at[rows].set(X)
+        self.alive = self.alive.at[rows].set(True)
+        self._grow_buffer(fill + b)
+        slots = jnp.arange(fill, fill + b)
+        self.buf_h = self.buf_h.at[slots].set(h)
+        self.buf_gid = self.buf_gid.at[slots].set(rows)
+        self.n_alloc = jnp.int32(n_ids + b)
+        self.buf_fill = jnp.int32(fill + b)
+        return gids
+
+    def delete(self, ids) -> int:
+        """Tombstone a batch of global ids (idempotent); returns the number
+        of rows that were live.  Physical removal happens at `compact()`."""
+        ids = np.unique(np.atleast_1d(np.asarray(ids, np.int32)))
+        if ids.size == 0:
+            return 0
+        if (ids < 0).any() or (ids >= self.n_ids).any():
+            raise IndexError(
+                f"delete ids must be in [0, {self.n_ids}), got "
+                f"[{ids.min()}, {ids.max()}]"
+            )
+        was_live = int(np.asarray(self.alive)[ids].sum())
+        self.alive = self.alive.at[jnp.asarray(ids)].set(False)
+        return was_live
+
+    def compact(self, *, full: bool = False) -> int:
+        """Size-tiered merge (LSM style): roll the live delta-buffer rows,
+        plus every segment no larger than the running merge total (smallest
+        first), into one new CSA segment; drop tombstoned rows physically.
+        `full=True` merges everything into a single segment.  Returns the
+        number of rows in the new segment (0 = nothing to merge)."""
+        alive = np.asarray(self.alive)
+        bg = np.asarray(self.buf_gid)[: self.buffer_count]
+        buf_live = bg[(bg >= 0) & alive[np.maximum(bg, 0)]]
+
+        keep: list[Segment] = []
+        merged: list[tuple[np.ndarray, np.ndarray]] = []
+        total = int(buf_live.size)
+        # smallest-first cascade: a segment joins the merge while its live
+        # size is <= the rows already being merged (tiering invariant), so
+        # big segments are rewritten only when the merge has grown to match.
+        order = sorted(self.segments, key=lambda s: int(s.cap))
+        for seg in order:
+            g = np.asarray(seg.gid)
+            live = g >= 0
+            live[live] = alive[g[live]]
+            n_live = int(live.sum())
+            if full or n_live == 0 or n_live <= max(total, 1):
+                merged.append((np.asarray(seg.h)[live], g[live]))
+                total += n_live
+            else:
+                keep.append(seg)
+
+        if total == 0:
+            new_segments = keep
+        else:
+            buf_mask = (bg >= 0) & alive[np.maximum(bg, 0)]
+            h_rows = [np.asarray(self.buf_h)[: self.buffer_count][buf_mask]]
+            gid_rows = [bg[buf_mask]]
+            for h_part, g_part in merged:
+                h_rows.append(h_part)
+                gid_rows.append(g_part)
+            new_segments = keep + [
+                Segment.build(
+                    np.concatenate(h_rows, axis=0),
+                    np.concatenate(gid_rows),
+                )
+            ]
+        self.segments = tuple(
+            sorted(new_segments, key=lambda s: -int(s.cap))
+        )
+        self.buf_h = jnp.full_like(self.buf_h[:_MIN_CAP], _PAD_HASH)
+        self.buf_gid = jnp.full_like(self.buf_gid[:_MIN_CAP], -1)
+        self.buf_fill = jnp.int32(0)
+        return total
+
+    def vacuum(self) -> np.ndarray:
+        """Reclaim the vector store: drop tombstoned rows (which `compact`
+        cannot touch -- global ids are store addresses) and renumber the live
+        rows densely in insertion order, rebuilding one CSA segment.  Returns
+        the old->new id map, -1 for dead ids; previously handed-out gids are
+        invalid afterwards.  O(n_live * m log n_live) -- run it when the dead
+        fraction of the store is worth the rebuild."""
+        n_ids = self.n_ids
+        alive = np.asarray(self.alive)[:n_ids]
+        old = alive.nonzero()[0]
+        remap = np.full((n_ids,), -1, np.int32)
+        remap[old] = np.arange(old.size, dtype=np.int32)
+        live_vecs = np.asarray(self.store)[old]
+        self.store = jnp.zeros((_MIN_CAP, self.d), jnp.float32)
+        self.alive = jnp.zeros((_MIN_CAP,), bool)
+        self.buf_h = jnp.full((_MIN_CAP, self.m), _PAD_HASH, jnp.int32)
+        self.buf_gid = jnp.full((_MIN_CAP,), -1, jnp.int32)
+        self.n_alloc = jnp.int32(0)
+        self.buf_fill = jnp.int32(0)
+        self.segments = ()
+        if old.size:
+            self.insert(live_vecs)  # same family -> identical hash strings
+            self.compact(full=True)
+        return remap
+
+    def _grow_store(self, need: int) -> None:
+        cap = self.store.shape[0]
+        if need <= cap:
+            return
+        new_cap = _pow2_at_least(need)
+        self.store = jnp.concatenate(
+            [self.store, jnp.zeros((new_cap - cap, self.d), jnp.float32)]
+        )
+        self.alive = jnp.concatenate(
+            [self.alive, jnp.zeros((new_cap - cap,), bool)]
+        )
+
+    def _grow_buffer(self, need: int) -> None:
+        cap = self.buf_h.shape[0]
+        if need <= cap:
+            return
+        new_cap = _pow2_at_least(need)
+        self.buf_h = jnp.concatenate(
+            [self.buf_h, jnp.full((new_cap - cap, self.m), _PAD_HASH, jnp.int32)]
+        )
+        self.buf_gid = jnp.concatenate(
+            [self.buf_gid, jnp.full((new_cap - cap,), -1, jnp.int32)]
+        )
+
+    # -- search -------------------------------------------------------------
+
+    def search(self, queries, params: SearchParams | None = None):
+        """c-k-ANNS over the live corpus, jitted end to end.  `params.source`
+        picks the per-segment candidate source; it is rewritten onto the
+        "segmented" registry entry (source="segmented", inner=<source>)."""
+        from .index import jit_search
+
+        p = params or SearchParams()
+        if p.source != "segmented":
+            p = p.replace(source="segmented", inner=p.source)
+        return jit_search(self, jnp.asarray(queries, jnp.float32), p)
+
+
+jax.tree_util.register_dataclass(
+    SegmentedLCCSIndex,
+    data_fields=["family", "store", "alive", "segments", "buf_h", "buf_gid",
+                 "n_alloc", "buf_fill"],
+    meta_fields=["metric"],
+)
+
+
+# ---------------------------------------------------------------------------
+# The "segmented" candidate source
+# ---------------------------------------------------------------------------
+
+
+def _pad_topk(ids: jax.Array, vals: jax.Array, lam: int):
+    """(B, j) -> (B, lam), -1 padded, for j <= lam."""
+    j = ids.shape[1]
+    if j < lam:
+        ids = jnp.pad(ids, ((0, 0), (0, lam - j)), constant_values=-1)
+        vals = jnp.pad(vals, ((0, 0), (0, lam - j)), constant_values=-1)
+    return ids, vals
+
+
+def _buffer_topk(index: SegmentedLCCSIndex, qh: jax.Array, lam: int):
+    """Exact LCCS scoring of the delta buffer; dead/free slots masked."""
+    ok = (index.buf_gid >= 0) & index.alive[jnp.maximum(index.buf_gid, 0)]
+
+    def one(q):
+        lens = jnp.where(ok, circ_run_lengths(index.buf_h, q), -1)
+        kk = min(lam, lens.shape[0])
+        vals, slot = jax.lax.top_k(lens, kk)
+        ids = jnp.where(vals >= 0, index.buf_gid[slot], -1)
+        return ids, jnp.where(vals >= 0, vals, -1)
+
+    ids, vals = jax.vmap(one)(qh)
+    return _pad_topk(ids, vals, lam)
+
+
+@register_source("segmented")
+def segmented_source(index, queries, qh, params):
+    """Per-segment `params.inner` search + delta-buffer scorer: local ids are
+    mapped to global ids, tombstones are masked, and the per-part top-lambda
+    sets merge exactly with `dedupe_topk` (LCCS scoring is pointwise)."""
+    if not isinstance(index, SegmentedLCCSIndex):
+        raise TypeError(
+            "source='segmented' needs a SegmentedLCCSIndex; monolithic "
+            "LCCSIndex callers should pick 'lccs'/'bruteforce'/'multiprobe-*'"
+        )
+    inner = get_source(params.inner)
+    parts_ids, parts_lcps = [], []
+    for seg in index.segments:
+        view = LCCSIndex(
+            family=index.family, data=index.store, h=seg.h, csa=seg.csa,
+            metric=index.metric,
+        )
+        local_ids, lcps = inner(view, queries, qh, params)
+        g = jnp.where(
+            local_ids >= 0,
+            seg.gid[jnp.clip(local_ids, 0, seg.cap - 1)],
+            -1,
+        )
+        live = (g >= 0) & index.alive[jnp.maximum(g, 0)]
+        parts_ids.append(jnp.where(live, g, -1))
+        parts_lcps.append(jnp.where(live, lcps, -1))
+    b_ids, b_lcps = _buffer_topk(index, qh, params.lam)
+    parts_ids.append(b_ids)
+    parts_lcps.append(b_lcps)
+    all_ids = jnp.concatenate(parts_ids, axis=1)
+    all_lcps = jnp.concatenate(parts_lcps, axis=1)
+    return jax.vmap(lambda i, l: dedupe_topk(i, l, params.lam))(all_ids, all_lcps)

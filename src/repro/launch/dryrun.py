@@ -159,6 +159,8 @@ def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
               "alias_size_in_bytes"):
         mem_info[k] = getattr(mem, k, None)
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict] per program
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     parsed = rf.analyze_hlo_text(hlo_text)
     terms = rf.roofline_terms(parsed, n_chips)

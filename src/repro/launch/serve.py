@@ -37,6 +37,9 @@ def main():
     ap.add_argument("--m", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--dynamic", action="store_true",
+                    help="serve a SegmentedLCCSIndex and interleave "
+                         "insert/delete/compact updates into the stream")
     args = ap.parse_args()
 
     search_params = SearchParams.from_legacy(
@@ -63,20 +66,41 @@ def main():
     gen = lm_token_batches(vocab=cfg.vocab, seed=0)
     corpus, _ = gen(0, args.corpus, 32)
     t0 = time.time()
-    engine.build_index(corpus)
+    engine.build_index(corpus, dynamic=args.dynamic)
     print(f"[launch.serve] indexed {args.corpus} docs in {time.time()-t0:.1f}s "
-          f"({engine.index.index_bytes()/1e6:.2f} MB)")
+          f"({engine.index.index_bytes()/1e6:.2f} MB, "
+          f"{'dynamic' if args.dynamic else 'static'})")
 
     rng = np.random.default_rng(1)
     picks = rng.integers(0, args.corpus, args.requests)
-    results = engine.serve_stream([corpus[i] for i in picks])
-    hits = sum(int(picks[i] in ids) for i, (ids, _) in enumerate(results))
+    stream: list = [corpus[i] for i in picks]
+    if args.dynamic:
+        # interleave a churn burst mid-stream: new docs in, a few docs out,
+        # then a compaction, with query micro-batches around each update
+        extra, _ = gen(1, args.max_batch, 32)
+        mid = len(stream) // 2
+        stream[mid:mid] = [
+            ("insert", extra),
+            ("delete", np.arange(0, args.corpus, max(args.corpus // 8, 1))),
+            ("compact",),
+        ]
+    results = engine.serve_stream(stream)
+    qres = [r for r in results if not (isinstance(r, tuple)
+                                       and isinstance(r[0], str))]
+    hits = sum(int(picks[i] in ids) for i, (ids, _) in enumerate(qres))
     s = engine.stats
     print(
         f"[launch.serve] {s.requests} requests / {s.batches} batches; "
         f"embed {s.embed_s:.2f}s search {s.search_s:.2f}s; "
         f"self-retrieval {hits}/{args.requests}"
     )
+    if args.dynamic:
+        idx = engine.index
+        print(
+            f"[launch.serve] churn: +{s.inserts} -{s.deletes} docs, "
+            f"{s.compactions} compactions; live={idx.n_live} "
+            f"segments={idx.segment_sizes()} buffer={idx.buffer_count}"
+        )
 
 
 if __name__ == "__main__":

@@ -2,9 +2,14 @@
 workload with one of the assigned backbones in the loop).
 
   build:  corpus token sequences -> backbone final-hidden mean-pool
-          embeddings -> LCCSIndex (hash strings + CSA).
+          embeddings -> LCCSIndex (hash strings + CSA), or -- with
+          ``dynamic=True`` -- a SegmentedLCCSIndex that absorbs online
+          inserts/deletes without a full rebuild.
   serve:  batched requests -> embed -> candidate source -> verified top-k,
-          with a micro-batching request queue.
+          with a micro-batching request queue.  `serve_stream` interleaves
+          update requests -- ("insert", tokens) / ("delete", ids) /
+          ("compact",) -- with query micro-batches, flushing queued queries
+          before each update so every query sees a consistent corpus.
 
 All query-phase knobs arrive as one `SearchParams` (static under jit): the
 engine holds a default, and both the embedding and the whole
@@ -20,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LCCSIndex, SearchParams, jit_search
+from repro.core import LCCSIndex, SearchParams, SegmentedLCCSIndex, jit_search
 from repro.models import lm
 
 DEFAULT_PARAMS = SearchParams(k=5, lam=64)
@@ -32,6 +37,9 @@ class ServeStats:
     batches: int = 0
     embed_s: float = 0.0
     search_s: float = 0.0
+    inserts: int = 0
+    deletes: int = 0
+    compactions: int = 0
 
 
 class RetrievalEngine:
@@ -59,11 +67,44 @@ class RetrievalEngine:
             out.append(np.asarray(self._embed(jnp.asarray(tokens[lo : lo + self.max_batch]))))
         return np.concatenate(out)
 
-    def build_index(self, corpus_tokens: np.ndarray, *, seed: int = 0):
+    def build_index(self, corpus_tokens: np.ndarray, *, seed: int = 0,
+                    dynamic: bool = False):
+        """Embed + index the corpus.  `dynamic=True` builds a
+        SegmentedLCCSIndex so `insert`/`delete`/`compact` work afterwards."""
         emb = self.embed(corpus_tokens)
         fam = "angular" if self.metric == "angular" else "euclidean"
-        self.index = LCCSIndex.build(emb, m=self.m, family=fam, seed=seed)
+        cls = SegmentedLCCSIndex if dynamic else LCCSIndex
+        self.index = cls.build(emb, m=self.m, family=fam, seed=seed)
         return self.index
+
+    # -- dynamic corpus (SegmentedLCCSIndex only) ----------------------------
+
+    def _dynamic_index(self) -> SegmentedLCCSIndex:
+        assert self.index is not None, "build_index first"
+        if not isinstance(self.index, SegmentedLCCSIndex):
+            raise TypeError(
+                "corpus updates need build_index(..., dynamic=True); this "
+                "engine holds a static LCCSIndex"
+            )
+        return self.index
+
+    def insert(self, corpus_tokens: np.ndarray) -> np.ndarray:
+        """Embed + insert new corpus documents; returns their global ids."""
+        gids = self._dynamic_index().insert(self.embed(corpus_tokens))
+        self.stats.inserts += len(gids)
+        return gids
+
+    def delete(self, ids) -> int:
+        """Tombstone corpus documents by global id."""
+        n = self._dynamic_index().delete(ids)
+        self.stats.deletes += n
+        return n
+
+    def compact(self, *, full: bool = False) -> int:
+        """Roll the delta buffer (and small segments) into a CSA segment."""
+        n = self._dynamic_index().compact(full=full)
+        self.stats.compactions += 1
+        return n
 
     def _resolve_params(self, params, legacy) -> SearchParams:
         if legacy:
@@ -87,7 +128,11 @@ class RetrievalEngine:
         t0 = time.time()
         q_emb = self.embed(query_tokens)
         t1 = time.time()
-        ids, dists = jit_search(self.index, jnp.asarray(q_emb), p)
+        if isinstance(self.index, SegmentedLCCSIndex):
+            # rewrites p onto the "segmented" source (inner=p.source)
+            ids, dists = self.index.search(jnp.asarray(q_emb), p)
+        else:
+            ids, dists = jit_search(self.index, jnp.asarray(q_emb), p)
         jax.block_until_ready(dists)
         t2 = time.time()
         self.stats.requests += query_tokens.shape[0]
@@ -96,12 +141,24 @@ class RetrievalEngine:
         self.stats.search_s += t2 - t1
         return np.asarray(ids), np.asarray(dists)
 
-    def serve_stream(self, requests: list[np.ndarray],
+    def serve_stream(self, requests: list,
                      params: SearchParams | None = None, **legacy):
         """Greedy micro-batching over a request stream (batched requests
-        deliverable): coalesce up to max_batch queued requests per step."""
+        deliverable): coalesce up to max_batch queued requests per step.
+
+        A request is either a query (token array) or -- against a dynamic
+        index -- a corpus update tuple:
+
+            ("insert", tokens (b, L))   -> ("inserted", global ids)
+            ("delete", ids)             -> ("deleted", n_live_removed)
+            ("compact",)                -> ("compacted", rows_merged)
+
+        Updates flush queued queries first, so results stay in stream order
+        and every query is answered against the corpus state at its arrival.
+        Returns one entry per request: (ids, dists) for queries, the ack
+        tuples above for updates."""
         p = self._resolve_params(params, legacy)
-        results = []
+        results: list = []
         queue: list[np.ndarray] = []
 
         def flush():
@@ -113,6 +170,18 @@ class RetrievalEngine:
             queue.clear()
 
         for r in requests:
+            if isinstance(r, tuple) and r and isinstance(r[0], str):
+                flush()  # queries queued before the update see the old corpus
+                op = r[0]
+                if op == "insert":
+                    results.append(("inserted", self.insert(r[1])))
+                elif op == "delete":
+                    results.append(("deleted", self.delete(r[1])))
+                elif op == "compact":
+                    results.append(("compacted", self.compact()))
+                else:
+                    raise ValueError(f"unknown stream op {op!r}")
+                continue
             queue.append(r)
             if len(queue) >= self.max_batch:
                 flush()

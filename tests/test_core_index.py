@@ -41,6 +41,7 @@ def test_index_recall_euclidean(dataset):
     assert (np.diff(d, axis=1) >= -1e-5).all()
 
 
+@pytest.mark.slow
 def test_recall_improves_with_lambda(dataset):
     """More candidates => recall must not drop (paper query-phase knob)."""
     X, Q, gt = dataset
@@ -147,6 +148,7 @@ def test_index_bytes_linear_in_m():
     assert 3.5 <= s64 / s16 <= 4.5  # O(nm) space (Theorem 3.1)
 
 
+@pytest.mark.slow
 def test_theorem51_quality_guarantee():
     """(R, c)-NNS with the Theorem 5.1 lambda: success probability must be
     well above the guaranteed 1/4 on a planted instance."""

@@ -3,6 +3,8 @@ XLA_FLAGS=--xla_force_host_platform_device_count=N so the main test process
 keeps seeing exactly 1 device (launch contract)."""
 import json
 import subprocess
+
+import pytest
 import sys
 import textwrap
 from pathlib import Path
@@ -29,6 +31,7 @@ def _run(script: str, n_dev: int = 8) -> str:
     return proc.stdout
 
 
+@pytest.mark.slow
 def test_moe_sharded_matches_local():
     """GShard-style shard_map dispatch == single-program dispatch (no drops)."""
     out = _run(
@@ -139,6 +142,7 @@ def test_grad_compress_int8_psum():
     assert "REL" in out
 
 
+@pytest.mark.slow
 def test_dryrun_single_cell_multipod():
     """The multi-pod mesh (2x16x16=512 fake devices) lowers+compiles one cell."""
     out = _run(

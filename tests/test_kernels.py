@@ -22,6 +22,7 @@ RNG = np.random.default_rng(0)
 @pytest.mark.parametrize("n", [1, 7, 512, 700])
 @pytest.mark.parametrize("m", [8, 24, 64])
 @pytest.mark.parametrize("alpha", [2, 64])
+@pytest.mark.slow
 def test_circrun_sweep(n, m, alpha):
     h = RNG.integers(0, alpha, (n, m)).astype(np.int32)
     q = RNG.integers(0, alpha, (m,)).astype(np.int32)
@@ -39,6 +40,7 @@ def test_circrun_all_match_row():
 @pytest.mark.parametrize("shape", [(1, 3, 5), (64, 128, 128), (300, 50, 33), (513, 257, 129)])
 @pytest.mark.parametrize("dtype", [np.float32, np.float64])
 @pytest.mark.parametrize("w", [1.0, 4.0])
+@pytest.mark.slow
 def test_hash_rp_sweep(shape, dtype, w):
     n, d, m = shape
     x = RNG.normal(size=(n, d)).astype(dtype)
@@ -56,6 +58,7 @@ def test_hash_rp_sweep(shape, dtype, w):
 
 
 @pytest.mark.parametrize("n,d,dr,m", [(1, 8, 8, 1), (300, 50, 32, 7), (257, 100, 128, 3)])
+@pytest.mark.slow
 def test_hash_xp_sweep(n, d, dr, m):
     x = RNG.normal(size=(n, d)).astype(np.float32)
     rot = RNG.normal(size=(m, d, dr)).astype(np.float32)
@@ -66,6 +69,7 @@ def test_hash_xp_sweep(n, d, dr, m):
 
 @pytest.mark.parametrize("metric", ["euclidean", "angular"])
 @pytest.mark.parametrize("B,L,n,d", [(1, 1, 10, 8), (4, 13, 200, 50), (2, 64, 500, 128)])
+@pytest.mark.slow
 def test_gather_l2_sweep(metric, B, L, n, d):
     data = RNG.normal(size=(n, d)).astype(np.float32)
     ids = RNG.integers(0, n, (B, L)).astype(np.int32)
@@ -79,6 +83,7 @@ def test_gather_l2_sweep(metric, B, L, n, d):
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize("sq,skv", [(64, 64), (96, 96), (32, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.slow
 def test_flash_attn_sweep(causal, sq, skv, dtype):
     dh = 32
     q = jnp.asarray(RNG.normal(size=(sq, dh)), dtype)
@@ -118,6 +123,7 @@ def test_flash_attn_gqa_wrapper():
 
 
 @pytest.mark.parametrize("L,D,N", [(8, 16, 4), (64, 40, 16), (128, 512, 16)])
+@pytest.mark.slow
 def test_ssm_scan_kernel_sweep(L, D, N):
     """Fused selective-scan kernel vs the sequential oracle."""
     from repro.kernels.ssm_scan.ref import ssm_scan_ref

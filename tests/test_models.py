@@ -21,6 +21,9 @@ from repro.models.ssm import (
     mamba2_block,
 )
 
+# every test here drives a full model forward/train step
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.key(0)
 RNG = np.random.default_rng(0)
 

@@ -1,0 +1,311 @@
+"""SegmentedLCCSIndex: dynamic-index semantics + segmented-vs-monolithic
+equivalence.
+
+The load-bearing property: after ANY interleaving of insert/delete/compact,
+searching the segmented index returns exactly the same (ids, dists) as a
+monolithic `LCCSIndex.build` over the equivalent live corpus with the same
+family seed.  Exactness holds whenever the candidate stage covers the whole
+live corpus (lam and width >= live size), because LCCS scoring is pointwise
+and per-segment top-lambda sets merge exactly; the tests pin that regime.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # hypothesis is a dev dependency; the seeded-random variants below
+    # keep the property exercised on minimal environments without it
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import LCCSIndex, SearchParams, SegmentedLCCSIndex
+
+D, M, K, LAM = 6, 8, 5, 64
+FAMILY_KW = dict(m=M, family="euclidean", w=4.0, seed=11)
+SOURCES = ("bruteforce", "lccs", "multiprobe-full", "multiprobe-skip")
+
+
+def _params(source):
+    probes = 5 if source.startswith("multiprobe") else 1
+    return SearchParams(k=K, lam=LAM, source=source, probes=probes)
+
+
+# ---------------------------------------------------------------------------
+# Interleaving model: ops are replayed against the segmented index AND a
+# pure-python corpus model; the model defines the equivalent live corpus.
+# ---------------------------------------------------------------------------
+
+
+def _apply_ops(ops):
+    """Replay ops.  Returns (segmented index, live gid array, live vectors)."""
+    idx = SegmentedLCCSIndex.create(D, **FAMILY_KW)
+    vecs: list[np.ndarray] = []  # by gid
+    alive: list[bool] = []
+    for op in ops:
+        if op[0] == "insert":
+            _, seed, count = op
+            X = np.random.default_rng(seed).normal(size=(count, D))
+            X = X.astype(np.float32) * 3.0
+            gids = idx.insert(X)
+            assert gids.tolist() == list(range(len(vecs), len(vecs) + count))
+            vecs.extend(X)
+            alive.extend([True] * count)
+        elif op[0] == "delete":
+            _, seed = op
+            live_ids = [g for g, a in enumerate(alive) if a]
+            if len(live_ids) <= 1:
+                continue  # keep the corpus non-empty
+            rng = np.random.default_rng(seed)
+            n_del = rng.integers(1, len(live_ids))
+            dels = rng.choice(live_ids, size=n_del, replace=False)
+            idx.delete(dels)
+            for g in dels:
+                alive[g] = False
+        else:  # compact
+            idx.compact(full=op[1])
+    live_gids = np.asarray([g for g, a in enumerate(alive) if a])
+    live_vecs = np.stack([vecs[g] for g in live_gids]) if live_gids.size else \
+        np.zeros((0, D), np.float32)
+    return idx, live_gids, live_vecs
+
+
+def _assert_equivalent(idx, live_gids, live_vecs, source, qseed=0):
+    Q = np.random.default_rng(qseed).normal(size=(4, D)).astype(np.float32) * 3.0
+    params = _params(source)
+    ids_s, d_s = idx.search(Q, params)
+    ids_s, d_s = np.asarray(ids_s), np.asarray(d_s)
+    assert idx.n_live == live_gids.size
+    if live_gids.size == 0:
+        assert (ids_s == -1).all()
+        assert np.isinf(d_s).all()
+        return
+    mono = LCCSIndex.build(live_vecs, **FAMILY_KW)
+    ids_m, d_m = mono.search(jnp.asarray(Q), params)
+    ids_m = np.asarray(ids_m)
+    mapped = np.where(ids_m >= 0, live_gids[np.maximum(ids_m, 0)], -1)
+    np.testing.assert_array_equal(ids_s, mapped)
+    np.testing.assert_allclose(d_s, np.asarray(d_m), rtol=1e-6, atol=1e-6)
+
+
+# -- three deterministic interleavings x all sources (acceptance floor) ------
+
+INTERLEAVINGS = {
+    "buffer-only": [("insert", 1, 7), ("insert", 2, 5), ("delete", 3)],
+    "segment+buffer+tombstones": [
+        ("insert", 4, 9), ("compact", False), ("insert", 5, 6),
+        ("delete", 6), ("insert", 7, 3),
+    ],
+    "tiered-merges": [
+        ("insert", 8, 8), ("compact", False), ("insert", 9, 8),
+        ("compact", False), ("delete", 10), ("compact", True),
+        ("insert", 11, 4), ("delete", 12), ("compact", False),
+    ],
+}
+
+
+@pytest.mark.parametrize("source", SOURCES)
+@pytest.mark.parametrize("name", sorted(INTERLEAVINGS))
+def test_equivalent_to_monolithic_rebuild(name, source):
+    idx, live_gids, live_vecs = _apply_ops(INTERLEAVINGS[name])
+    _assert_equivalent(idx, live_gids, live_vecs, source)
+
+
+# -- random interleavings (seeded sampler; hypothesis drives it when present)
+
+
+def _random_ops(rng):
+    ops = [("insert", int(rng.integers(0, 2**20)), int(rng.integers(1, 9)))]
+    for _ in range(int(rng.integers(1, 6))):
+        kind = rng.choice(["insert", "delete", "compact"])
+        if kind == "insert":
+            ops.append(("insert", int(rng.integers(0, 2**20)),
+                        int(rng.integers(1, 9))))
+        elif kind == "delete":
+            ops.append(("delete", int(rng.integers(0, 2**20))))
+        else:
+            ops.append(("compact", bool(rng.integers(0, 2))))
+    return ops
+
+
+@pytest.mark.parametrize("source", SOURCES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_interleavings_equivalent(source, seed):
+    rng = np.random.default_rng(seed * 7919 + 13)
+    idx, live_gids, live_vecs = _apply_ops(_random_ops(rng))
+    _assert_equivalent(idx, live_gids, live_vecs, source,
+                       qseed=int(rng.integers(0, 2**20)))
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def op_sequences(draw):
+        ops = [("insert", draw(st.integers(0, 2**20)), draw(st.integers(1, 8)))]
+        for _ in range(draw(st.integers(1, 5))):
+            kind = draw(st.sampled_from(["insert", "delete", "compact"]))
+            if kind == "insert":
+                ops.append(("insert", draw(st.integers(0, 2**20)),
+                            draw(st.integers(1, 8))))
+            elif kind == "delete":
+                ops.append(("delete", draw(st.integers(0, 2**20))))
+            else:
+                ops.append(("compact", draw(st.booleans())))
+        return ops
+
+    @pytest.mark.parametrize("source", SOURCES)
+    @settings(max_examples=6, deadline=None)
+    @given(op_sequences(), st.integers(0, 2**20))
+    def test_hypothesis_interleavings_equivalent(source, ops, qseed):
+        idx, live_gids, live_vecs = _apply_ops(ops)
+        _assert_equivalent(idx, live_gids, live_vecs, source, qseed=qseed)
+
+
+# -- dynamic-index unit semantics --------------------------------------------
+
+
+def _fresh(n=12, seed=0):
+    X = np.random.default_rng(seed).normal(size=(n, D)).astype(np.float32)
+    idx = SegmentedLCCSIndex.create(D, **FAMILY_KW)
+    gids = idx.insert(X)
+    return idx, X, gids
+
+
+def test_insert_assigns_sequential_gids_and_grows():
+    idx, _, gids = _fresh(12)
+    assert gids.tolist() == list(range(12))
+    assert idx.n_ids == 12 and idx.n_live == 12 and idx.buffer_count == 12
+    more = idx.insert(np.ones((3, D), np.float32))
+    assert more.tolist() == [12, 13, 14]
+    assert idx.store.shape[0] >= 15 and idx.buf_h.shape[0] >= 15
+
+
+def test_delete_is_tombstone_and_idempotent():
+    idx, _, gids = _fresh(10)
+    assert idx.delete(gids[:4]) == 4
+    assert idx.n_live == 6
+    assert idx.delete(gids[:4]) == 0  # already dead: no-op
+    with pytest.raises(IndexError):
+        idx.delete([99])
+    # deleted rows never come back from search
+    ids, _ = idx.search(np.zeros((1, D), np.float32), SearchParams(k=10, lam=LAM))
+    returned = set(np.asarray(ids)[0].tolist()) - {-1}
+    assert returned.isdisjoint(set(gids[:4].tolist()))
+
+
+def test_compact_drops_dead_rows_and_tiers_segments():
+    idx, _, gids = _fresh(10)
+    idx.delete(gids[:5])
+    assert idx.compact() == 5  # only live rows merged
+    assert idx.buffer_count == 0
+    assert idx.segment_sizes() == [5]
+    # a second small batch tiers into the existing segment (5 <= merge total)
+    idx.insert(np.random.default_rng(1).normal(size=(6, D)).astype(np.float32))
+    idx.compact()
+    assert idx.segment_sizes() == [11]
+    # a big segment is NOT rewritten by a small merge
+    idx.insert(np.random.default_rng(2).normal(size=(2, D)).astype(np.float32))
+    idx.compact()
+    assert sorted(idx.segment_sizes()) == [2, 11]
+
+
+def test_compact_empty_and_dead_only_states():
+    idx = SegmentedLCCSIndex.create(D, **FAMILY_KW)
+    assert idx.compact() == 0 and idx.segments == ()
+    gids = idx.insert(np.ones((4, D), np.float32))
+    idx.delete(gids)
+    assert idx.compact() == 0  # everything dead: nothing to merge
+    assert idx.segments == () and idx.n_live == 0
+    ids, dists = idx.search(np.zeros((2, D), np.float32), SearchParams(k=3))
+    assert (np.asarray(ids) == -1).all() and np.isinf(np.asarray(dists)).all()
+
+
+def test_segmented_index_is_pytree():
+    idx, _, _ = _fresh(9)
+    idx.compact()
+    idx.insert(np.ones((2, D), np.float32))
+    leaves, treedef = jax.tree_util.tree_flatten(idx)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(rebuilt, SegmentedLCCSIndex)
+    np.testing.assert_array_equal(np.asarray(rebuilt.buf_gid),
+                                  np.asarray(idx.buf_gid))
+    moved = jax.device_put(idx)
+    assert len(moved.segments) == len(idx.segments)
+
+
+def test_pytree_roundtrip_preserves_counters_and_mutability():
+    """The allocation counters are pytree leaves, so a device_put /
+    flatten-unflatten copy keeps allocating fresh gids (no id reuse)."""
+    idx, X0, _ = _fresh(9)
+    idx.compact()
+    x1 = np.random.default_rng(1).normal(size=(2, D)).astype(np.float32)
+    x2 = np.random.default_rng(2).normal(size=(3, D)).astype(np.float32)
+    idx.insert(x1)
+    moved = jax.device_put(idx)
+    assert moved.n_ids == 11 and moved.buffer_count == 2
+    gids = moved.insert(x2)
+    assert gids.tolist() == [11, 12, 13]
+    _assert_equivalent(moved, np.arange(14), np.concatenate([X0, x1, x2]),
+                       "lccs")
+
+
+def test_delete_counts_duplicates_once():
+    idx, _, gids = _fresh(10)
+    assert idx.delete([gids[0], gids[0], gids[1]]) == 2
+    assert idx.n_live == 8
+
+
+def test_vacuum_reclaims_store_and_remaps_ids():
+    idx, X, gids = _fresh(12)
+    idx.compact()
+    idx.delete(gids[2:10])
+    grown_cap = idx.store.shape[0]
+    remap = idx.vacuum()
+    assert remap.tolist() == [0, 1] + [-1] * 8 + [2, 3]
+    assert idx.n_ids == 4 and idx.n_live == 4
+    assert idx.store.shape[0] < grown_cap or grown_cap == 8
+    # search results match a monolithic index over the surviving rows,
+    # under the NEW dense id space
+    _assert_equivalent(idx, np.arange(4), X[[0, 1, 10, 11]], "lccs")
+    # vacuum of an all-dead index empties cleanly
+    idx.delete(np.arange(4))
+    assert idx.vacuum().tolist() == [-1] * 4
+    assert idx.n_ids == 0 and idx.segments == ()
+
+
+def test_search_rewrites_source_and_rejects_recursion():
+    idx, _, _ = _fresh(8)
+    ids_a, _ = idx.search(np.zeros((1, D)), SearchParams(k=3, source="bruteforce"))
+    ids_b, _ = idx.search(np.zeros((1, D)),
+                          SearchParams(k=3, source="segmented", inner="bruteforce"))
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    with pytest.raises(ValueError, match="recurse"):
+        SearchParams(inner="segmented")
+
+
+def test_segmented_source_rejects_monolithic_index():
+    X = np.random.default_rng(0).normal(size=(8, D)).astype(np.float32)
+    mono = LCCSIndex.build(X, **FAMILY_KW)
+    from repro.core.index import search
+
+    with pytest.raises(TypeError, match="SegmentedLCCSIndex"):
+        search(mono, jnp.zeros((1, D)), SearchParams(source="segmented"))
+
+
+def test_jit_cache_hit_across_mutations():
+    """Inserts/deletes that do not grow capacity reuse the jit cache; only
+    compaction (treedef change) retraces."""
+    idx = SegmentedLCCSIndex.create(D, **FAMILY_KW)
+    idx.insert(np.random.default_rng(0).normal(size=(4, D)).astype(np.float32))
+    Q = np.zeros((2, D), np.float32)
+    p = SearchParams(k=3, lam=8)
+    from repro.core.index import jit_search
+
+    idx.search(Q, p)
+    before = jit_search._cache_size()
+    idx.delete([0])
+    idx.insert(np.ones((2, D), np.float32))  # stays within the min capacity
+    idx.search(Q, p)
+    assert jit_search._cache_size() == before

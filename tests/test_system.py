@@ -12,6 +12,7 @@ from repro.serve import RetrievalEngine
 from repro.train.trainer import Trainer, TrainerConfig
 
 
+@pytest.mark.slow
 def test_train_then_serve_roundtrip(tmp_path):
     """The full production path: train a (reduced) backbone with
     checkpointing, restore it, build an LCCS index over its embeddings,
@@ -52,3 +53,48 @@ def test_serve_stream_microbatching():
     assert engine.stats.batches == 3  # 8 + 8 + 4
     hits = sum(int(i in results[i][0]) for i in range(20))
     assert hits >= 18
+
+
+def test_serve_stream_interleaves_corpus_updates():
+    """Dynamic serving: insert/delete/compact requests ride the same stream
+    as query micro-batches; queries queued before an update are answered
+    against the pre-update corpus, later queries see the new one."""
+    cfg = ARCHS["gemma-2b"].smoke()
+    params = api.init_model(jax.random.key(0), cfg)
+    engine = RetrievalEngine(cfg, params, m=16, metric="angular", max_batch=4)
+    corpus, _ = lm_token_batches(vocab=cfg.vocab, seed=3)(0, 40, 16)
+    engine.build_index(corpus[:32], dynamic=True)
+    p = SearchParams(k=3, lam=48)
+
+    stream = [
+        corpus[0], corpus[1],
+        ("insert", corpus[32:40]),   # docs 32..39 get gids 32..39
+        corpus[35],                  # must now find itself
+        ("delete", np.arange(8)),
+        corpus[2],                   # its own doc is gone from the corpus
+        ("compact",),
+        corpus[36],                  # still found after the merge
+    ]
+    results = engine.serve_stream(stream, p)
+    assert len(results) == len(stream)
+    assert results[2][0] == "inserted"
+    assert results[2][1].tolist() == list(range(32, 40))
+    assert results[4] == ("deleted", 8)
+    # size-tiered: only the 8 buffered rows merge (the 24-live segment is
+    # larger than the merge total, so it is not rewritten)
+    assert results[6][0] == "compacted" and results[6][1] == 8
+    assert engine.index.n_live == 32 and engine.index.buffer_count == 0
+    assert sorted(engine.index.segment_sizes()) == [8, 24]
+
+    q_before, q_self, q_deleted, q_after = (
+        results[0], results[1], results[5], results[7]
+    )
+    assert 0 in q_before[0] and 1 in q_self[0]
+    assert 35 in results[3][0]
+    assert 2 not in q_deleted[0]  # tombstoned rows never surface
+    assert 36 in q_after[0]
+    # a static engine refuses update ops
+    static = RetrievalEngine(cfg, params, m=16, metric="angular")
+    static.build_index(corpus[:8])
+    with pytest.raises(TypeError, match="dynamic=True"):
+        static.serve_stream([("delete", [0])], p)

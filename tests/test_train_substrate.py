@@ -84,6 +84,7 @@ def test_checkpoint_async(tmp_path):
     assert mgr.latest_step() == 1
 
 
+@pytest.mark.slow
 def test_microbatch_grad_accum_matches_full_batch():
     cfg = ARCHS["gemma-2b"].smoke()
     state = init_train_state(jax.random.key(0), cfg)
@@ -102,6 +103,7 @@ def test_microbatch_grad_accum_matches_full_batch():
     assert err < 5e-4, err
 
 
+@pytest.mark.slow
 def test_trainer_runs_resumes_after_preemption(tmp_path):
     """Train 6 steps, 'preempt', restart, continue to 12 -- loss history is
     identical to an uninterrupted run (checkpoint/restart determinism)."""
