@@ -1,0 +1,121 @@
+"""Beyond-paper Figure 12: recall-vs-bytes / QPS across vector stores.
+
+The paper's verify step scans raw fp32 vectors (O(n*d*4) bytes resident).
+This sweep measures what the quantized corpus stores buy: for each store in
+{fp32, bf16, int8} x every candidate source, recall@10, QPS, and the
+resident byte split (search structure vs vector store), on the sift-like
+clustered synthetic.  The int8 rows verify two-stage (approximate scan +
+fp32 rerank of the k * rerank_mult survivors); the acceptance target is
+int8 memory <= fp32/3.5 with recall within 1% at rerank_mult=4.
+
+Also runs one segmented (dynamic-index) configuration per store to confirm
+the store protocol composes with the LSM path.
+
+Returns the per-config records so `run.py` can serialize them into
+BENCH_search.json (the perf-trajectory artifact tracked from PR 3 onward).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import CsvRows, dataset, ground_truth, recall, timed
+
+SOURCES = ("bruteforce", "lccs", "multiprobe-full", "multiprobe-skip")
+STORES = ("fp32", "bf16", "int8")
+
+
+def _params(source: str, store: str, rerank_mult: int):
+    from repro.core import SearchParams
+
+    return SearchParams(
+        k=10, lam=200, source=source, probes=9 if "multiprobe" in source else 1,
+        store=store, rerank_mult=rerank_mult,
+    )
+
+
+def run(csv: CsvRows, n=8000, rerank_mult=4):
+    import tempfile
+    from pathlib import Path
+
+    from repro.core import LCCSIndex, SegmentedLCCSIndex
+
+    X, Q, angular = dataset("sift-like", n=n)
+    gt, _ = ground_truth(X, Q, 10, angular)
+    records = []
+    tail_dir = Path(tempfile.mkdtemp(prefix="fig12_tails_"))
+
+    for store in STORES:
+        # quantized monolithic configs park the fp32 tail on disk -- the
+        # production memory layout; resident bytes then honestly reflect the
+        # reduction (an in-memory tail would *add* to fp32, not replace it),
+        # and QPS includes the memmap gather of the rerank survivors
+        tail_kw = {} if store == "fp32" else {
+            "tail_path": tail_dir / f"{store}.npy"}
+        idx = LCCSIndex.build(X, m=64, family="euclidean", w=16.0, seed=0,
+                              store=store, **tail_kw)
+        for source in SOURCES:
+            p = _params(source, store, rerank_mult)
+            (ids, _), t = timed(idx.search, Q, p, repeats=2)
+            r = recall(np.asarray(ids), gt)
+            rec = {
+                "store": store, "source": source, "segmented": False,
+                "tail": "none" if store == "fp32" else "disk",
+                "recall_at_10": round(r, 4),
+                "qps": round(Q.shape[0] / t, 1),
+                "store_bytes": idx.store_bytes(),
+                "quant_bytes": idx.store.nbytes(),
+                "index_bytes": idx.index_bytes(),
+                "total_bytes": idx.total_bytes(),
+                "rerank_mult": rerank_mult,
+            }
+            records.append(rec)
+            csv.add(f"fig12/{store}/{source}", t / Q.shape[0],
+                    f"recall={r:.3f};store_mb={idx.store.nbytes()/1e6:.2f}")
+
+        # dynamic-index composition check: bulk load + a churn batch
+        seg = SegmentedLCCSIndex.build(X[: n // 2], m=64, family="euclidean",
+                                       w=16.0, seed=0, store=store)
+        seg.insert(X[n // 2 :])
+        p = _params("lccs", store, rerank_mult)
+        (ids, _), t = timed(seg.search, Q, p, repeats=2)
+        r = recall(np.asarray(ids), gt)
+        records.append({
+            "store": store, "source": "lccs", "segmented": True,
+            "tail": "none" if store == "fp32" else "memory",
+            "recall_at_10": round(r, 4),
+            "qps": round(Q.shape[0] / t, 1),
+            "store_bytes": seg.store_bytes(),
+            "quant_bytes": seg.store.nbytes(),
+            "index_bytes": seg.index_bytes(),
+            "total_bytes": seg.total_bytes(),
+            "rerank_mult": rerank_mult,
+        })
+        csv.add(f"fig12/{store}/segmented-lccs", t / Q.shape[0],
+                f"recall={r:.3f}")
+
+    # headline numbers: memory reduction + worst-case recall gap per source
+    fp32 = {r["source"]: r for r in records
+            if r["store"] == "fp32" and not r["segmented"]}
+    int8 = {r["source"]: r for r in records
+            if r["store"] == "int8" and not r["segmented"]}
+    # resident bytes of the measured configurations (disk tail for int8)
+    reduction = fp32["lccs"]["store_bytes"] / int8["lccs"]["store_bytes"]
+    worst_gap = max(fp32[s]["recall_at_10"] - int8[s]["recall_at_10"]
+                    for s in SOURCES)
+    csv.add("fig12/int8-vs-fp32", 0.0,
+            f"mem_reduction={reduction:.2f}x;worst_recall_gap={worst_gap:.4f}")
+    return {
+        "n": int(n), "d": int(X.shape[1]), "k": 10,
+        "memory_reduction_int8_vs_fp32": round(float(reduction), 3),
+        "worst_recall_gap_int8_vs_fp32": round(float(worst_gap), 4),
+        "configs": records,
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    csv = CsvRows()
+    out = run(csv, n=4000)
+    csv.dump()
+    print(json.dumps(out, indent=2))

@@ -1,21 +1,47 @@
 """Benchmark harness: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes the search-perf
+trajectory (QPS / recall / index bytes per store x source) to
+``BENCH_search.json`` so successive PRs are comparable machine-readably.
 
-Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--smoke]
+  --quick  halve the dataset sizes
+  --smoke  fig12 (store sweep) only, tiny n -- the CI gate; still emits
+           BENCH_search.json
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
+from pathlib import Path
 
 from .common import CsvRows
 
 
+def _write_bench_json(payload: dict, path: str | Path = "BENCH_search.json"):
+    payload = dict(payload, wall_s=round(payload.get("wall_s", 0.0), 1))
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {path}")
+
+
 def main() -> None:
     quick = "--quick" in sys.argv
+    smoke = "--smoke" in sys.argv
     n = 4000 if quick else 8000
     csv = CsvRows()
     t0 = time.time()
+    from . import fig12_memory
+
+    if smoke:
+        print("# fig12 (smoke): recall vs store bytes / QPS per store", flush=True)
+        search_perf = fig12_memory.run(csv, n=1500)
+        search_perf["wall_s"] = time.time() - t0
+        search_perf["mode"] = "smoke"
+        _write_bench_json(search_perf)
+        print("name,us_per_call,derived")
+        csv.dump()
+        return
+
     from . import fig4_5_recall, fig6_7_indexing, fig8_k, fig9_m, fig10_probes
     from . import fig11_dynamic, kernel_bench, table1_scaling
 
@@ -31,11 +57,16 @@ def main() -> None:
     fig10_probes.run(csv, n=n)
     print("# fig11: dynamic churn (segmented vs full rebuild)", flush=True)
     fig11_dynamic.run(csv, n=n // 2)
+    print("# fig12: recall vs store bytes / QPS per store", flush=True)
+    search_perf = fig12_memory.run(csv, n=n)
     print("# table1: complexity scaling in n", flush=True)
     table1_scaling.run(csv)
     print("# kernels", flush=True)
     kernel_bench.run(csv)
 
+    search_perf["wall_s"] = time.time() - t0
+    search_perf["mode"] = "quick" if quick else "full"
+    _write_bench_json(search_perf)
     print(f"# total bench wall time: {time.time()-t0:.1f}s")
     print("name,us_per_call,derived")
     csv.dump()

@@ -30,7 +30,11 @@ from .bruteforce import bruteforce_topk, circ_run_lengths
 from .search import klccs_search
 # importing .segments registers the "segmented" candidate source
 from .segments import Segment, SegmentedLCCSIndex
+from .verify import rerank_rows, verify_store
 from . import multiprobe, theory
+# store layouts live in repro.store; re-exported here because they are part
+# of the index-construction vocabulary (LCCSIndex.build(store=...))
+from repro.store import available_stores, make_store
 
 __all__ = [
     "CSA",
@@ -54,6 +58,10 @@ __all__ = [
     "circ_run_lengths",
     "klccs_search",
     "verify_candidates",
+    "verify_store",
+    "rerank_rows",
+    "available_stores",
+    "make_store",
     "distance",
     "make_family",
     "multiprobe",

@@ -44,12 +44,20 @@ Mutable corpora: `LCCSIndex` is build-once (a corpus change means a full
 O(nm log n) rebuild).  If the corpus takes online inserts/deletes, use
 `repro.core.segments.SegmentedLCCSIndex` -- same SearchParams / jit_search
 pipeline over an LSM-style stack of CSA segments plus a delta buffer.
+
+Corpus storage is pluggable (`repro.store`): ``build(..., store="int8")``
+quantizes the vectors on ingest (symmetric per-row int8, ~4x smaller) and
+search switches to the two-stage verify path -- approximate scan over the
+quantized store, exact fp32 rerank of the best ``k * rerank_mult`` survivors
+against the tail (in-memory by default; pass ``tail_path=`` to keep it on
+disk and drop resident fp32 entirely).  ``store="bf16"`` halves memory with
+near-fp32 accuracy; ``store="fp32"`` is the seed layout and single-stage.
 """
 from __future__ import annotations
 
 import pickle
 import warnings
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 from pathlib import Path
 from typing import Any
@@ -58,7 +66,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.store import make_store
+from repro.store import stores as store_mod
+from repro.store import tail as tail_mod
+
 from . import lsh as lsh_mod
+from . import verify as verify_mod
 from .csa import CSA, build_csa
 from .params import SearchParams
 from .sources import get_source
@@ -95,13 +108,19 @@ class LCCSIndex:
     Any corpus change requires a full rebuild; for online insert/delete use
     `repro.core.segments.SegmentedLCCSIndex`, which serves the same
     SearchParams/jit_search pipeline over CSA segments plus a delta buffer.
+
+    Vectors live in a pluggable `repro.store.VectorStore` (`store` field);
+    inexact (quantized) stores pair with an fp32 `tail` for the exact rerank
+    stage -- a pytree leaf when in memory, or `tail_path` when disk-lazy.
     """
 
     family: Any  # LSH family (lsh.py) -- itself a pytree
-    data: jax.Array  # (n, d) original vectors
+    store: Any  # repro.store.VectorStore holding the (n, d) corpus vectors
     h: jax.Array  # (n, m) int32 hash strings
     csa: CSA | None  # None for bruteforce-only indexes
     metric: str
+    tail: jax.Array | None = None  # (n, d) fp32 rerank rows (inexact stores)
+    tail_path: str | None = field(default=None)  # disk-lazy rerank target
 
     # -- construction -------------------------------------------------------
 
@@ -113,18 +132,43 @@ class LCCSIndex:
         family: str = "euclidean",
         seed: int = 0,
         build_csa_structure: bool = True,
+        store: str = "fp32",
+        tail_path: str | Path | None = None,
         **family_kw,
     ) -> "LCCSIndex":
+        """Hash + CSA build over `data`, stored as the named vector store.
+
+        store="fp32" (default) keeps exact rows -- the seed behaviour.
+        Quantized stores ("bf16", "int8") verify in two stages; their fp32
+        rerank tail is held in memory unless `tail_path` is given, in which
+        case it is written to disk as .npy and gathered lazily per batch
+        (use `index.search`; a disk tail cannot live inside one jit).
+        """
         data = jnp.asarray(data, dtype=jnp.float32)
         n, d = data.shape
         fam = lsh_mod.make_family(family, jax.random.key(seed), d, m, **family_kw)
         h = fam.hash(data)
         csa = build_csa(h) if build_csa_structure else None
-        return LCCSIndex(family=fam, data=data, h=h, csa=csa, metric=fam.metric)
+        vstore = make_store(store, data)
+        tail = None
+        tail_p = None
+        if not vstore.exact:
+            if tail_path is not None:
+                tail_p = tail_mod.write_tail(tail_path, data)
+            else:
+                tail = data
+        return LCCSIndex(family=fam, store=vstore, h=h, csa=csa,
+                         metric=fam.metric, tail=tail, tail_path=tail_p)
+
+    @property
+    def data(self) -> jax.Array:
+        """(n, d) float32 corpus view: the exact tail when resident, else the
+        store's (possibly dequantized) reconstruction."""
+        return self.tail if self.tail is not None else self.store.dense()
 
     @property
     def n(self) -> int:
-        return self.data.shape[0]
+        return self.store.n
 
     @property
     def m(self) -> int:
@@ -137,13 +181,42 @@ class LCCSIndex:
             tot += self.csa.I.size * 4 + self.csa.P.size * 4 + self.csa.Hd.size * 4
         return tot
 
+    def store_bytes(self) -> int:
+        """Resident vector bytes: the store itself + any in-memory fp32 tail
+        (a disk-lazy tail costs 0 resident bytes)."""
+        tot = self.store.nbytes()
+        if self.tail is not None:
+            tot += self.tail.size * 4
+        return tot
+
+    def total_bytes(self) -> int:
+        """Full serving footprint: search structure + resident vectors."""
+        return self.index_bytes() + self.store_bytes()
+
     # -- search (canonical API) ---------------------------------------------
 
     def search(self, queries, params: SearchParams | None = None):
         """c-k-ANNS: candidate generation + true-distance verification,
-        jit-compiled end to end.  Returns (ids (B, k), dists (B, k))."""
-        return jit_search(self, jnp.asarray(queries, dtype=jnp.float32),
-                          params or SearchParams())
+        jit-compiled end to end.  Returns (ids (B, k), dists (B, k)).
+
+        With a disk-lazy tail (built with `tail_path=`) the pipeline splits:
+        jitted stage 1 (hash -> candidates -> approximate scan -> survivors),
+        host memmap gather of the survivors' fp32 rows, jitted exact rerank.
+        """
+        queries = jnp.asarray(queries, dtype=jnp.float32)
+        p = params or SearchParams()
+        # pin the tri-state kernel toggle to a concrete bool so the resolved
+        # value participates in the jit cache key (a later env-var change
+        # cannot be seen by an already-compiled executable)
+        if p.use_gather_kernel is None:
+            p = p.replace(
+                use_gather_kernel=verify_mod.resolve_use_kernel(None))
+        if not self.store.exact and self.tail is None and self.tail_path:
+            surv = _jit_survivors(self, queries, p)
+            rows = jnp.asarray(tail_mod.gather_tail(self.tail_path, surv))
+            return verify_mod.rerank_rows(rows, queries, surv, p.k,
+                                          p.metric or self.metric)
+        return jit_search(self, queries, p)
 
     # -- legacy kwargs shims (deprecated) -----------------------------------
 
@@ -180,10 +253,23 @@ class LCCSIndex:
             k: (np.asarray(v) if isinstance(v, jax.Array) else v)
             for k, v in dataclasses.asdict(self.family).items()
         }
+        store_fields = {
+            f.name: np.asarray(getattr(self.store, f.name))
+            for f in dataclasses.fields(self.store)
+        }
+        # a disk-lazy tail is embedded so the pickle is self-contained: the
+        # .npy may not exist wherever (or whenever) the index is loaded
+        tail_arr = None if self.tail is None else np.asarray(self.tail)
+        if tail_arr is None and self.tail_path:
+            tail_arr = np.load(self.tail_path)
         blob = {
             "family_cls": type(self.family).__name__,
             "family_fields": fam_fields,
-            "data": np.asarray(self.data),
+            "store_kind": self.store.kind,
+            "store_fields": store_fields,
+            "tail": tail_arr,
+            "tail_in_memory": self.tail is not None,
+            "tail_path": self.tail_path,
             "h": np.asarray(self.h),
             "csa": None if self.csa is None else [np.asarray(x) for x in self.csa],
             "metric": self.metric,
@@ -195,6 +281,8 @@ class LCCSIndex:
 
     @staticmethod
     def load(path: str | Path) -> "LCCSIndex":
+        from repro.store import get_store_cls
+
         with open(path, "rb") as f:
             blob = pickle.load(f)
         cls = getattr(lsh_mod, blob["family_cls"])
@@ -204,21 +292,39 @@ class LCCSIndex:
         }
         fam = cls(**fields)
         csa = None if blob["csa"] is None else CSA(*[jnp.asarray(x) for x in blob["csa"]])
+        if "store_kind" in blob:
+            store_cls = get_store_cls(blob["store_kind"])
+            vstore = store_cls(**{k: jnp.asarray(v)
+                                  for k, v in blob["store_fields"].items()})
+            tail_path = blob["tail_path"]
+            if blob["tail"] is not None and not blob.get("tail_in_memory", True):
+                # disk-lazy index: the embedded tail is the truth -- always
+                # re-materialise it (a pre-existing file at the same path may
+                # belong to a different index and would poison the rerank)
+                tail_path = tail_mod.write_tail(tail_path, blob["tail"])
+                tail = None
+            else:
+                tail = None if blob["tail"] is None else jnp.asarray(blob["tail"])
+        else:  # pre-store pickles: raw fp32 "data" array
+            vstore = store_mod.Fp32Store.from_dense(blob["data"])
+            tail, tail_path = None, None
         return LCCSIndex(
             family=fam,
-            data=jnp.asarray(blob["data"]),
+            store=vstore,
             h=jnp.asarray(blob["h"]),
             csa=csa,
             metric=blob["metric"],
+            tail=tail,
+            tail_path=tail_path,
         )
 
 
-# An index is a first-class JAX value: arrays (and the family/CSA subtrees)
-# are leaves; the metric string is static aux data.
+# An index is a first-class JAX value: arrays (and the family/store/CSA
+# subtrees) are leaves; the metric string and disk-tail path are static aux.
 jax.tree_util.register_dataclass(
     LCCSIndex,
-    data_fields=["family", "data", "h", "csa"],
-    meta_fields=["metric"],
+    data_fields=["family", "store", "h", "csa", "tail"],
+    meta_fields=["metric", "tail_path"],
 )
 
 
@@ -237,13 +343,37 @@ def candidates(index: LCCSIndex, queries: jax.Array, params: SearchParams):
 
 def search(index: LCCSIndex, queries: jax.Array, params: SearchParams):
     """Full c-k-ANNS pipeline: hash -> candidate source -> verification.
-    Pure function of a pytree index; `params` must be static under jit."""
+    Pure function of a pytree index; `params` must be static under jit.
+
+    Verification runs against the index's vector store: single-stage for
+    exact stores, approximate-scan + fp32 rerank for quantized ones (see
+    `repro.core.verify`).  A disk-lazy tail cannot be traced -- use
+    `index.search`, which orchestrates the split pipeline on the host."""
+    if not index.store.exact and index.tail is None and index.tail_path:
+        raise ValueError(
+            "this index's fp32 rerank tail is disk-lazy (tail_path="
+            f"{index.tail_path!r}); jit_search cannot gather from disk -- "
+            "call index.search(queries, params) instead"
+        )
     queries = jnp.asarray(queries, dtype=jnp.float32)
     ids, _ = candidates(index, queries, params)
-    return verify_candidates(
-        index.data, queries, ids, params.k, params.metric or index.metric
+    return verify_mod.verify_store(
+        index.store, index.tail, queries, ids, params,
+        params.metric or index.metric,
     )
+
+
+def _survivors(index, queries: jax.Array, params: SearchParams):
+    """Stage 1 only (disk-lazy orchestration): candidate generation plus the
+    approximate scan's top k * rerank_mult survivor ids."""
+    queries = jnp.asarray(queries, dtype=jnp.float32)
+    ids, _ = candidates(index, queries, params)
+    surv, _ = verify_mod.survivors(
+        index.store, queries, ids, params, params.metric or index.metric
+    )
+    return surv
 
 
 jit_search = jax.jit(search, static_argnames="params")
 jit_candidates = jax.jit(candidates, static_argnames="params")
+_jit_survivors = jax.jit(_survivors, static_argnames="params")

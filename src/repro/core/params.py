@@ -32,6 +32,23 @@ inner        per-segment candidate source run by the "segmented" source
              (`repro.core.segments.SegmentedLCCSIndex`); ignored by every
              other source.  `SegmentedLCCSIndex.search` sets it for you by
              rewriting source=<name> to (source="segmented", inner=<name>).
+store        expected vector-store kind for the verify scan ("fp32" | "bf16"
+             | "int8"); None accepts whatever the index holds.  A mismatch
+             raises at trace time -- the field documents (and pins) which
+             representation a serving config verifies against.
+rerank_mult  over-fetch factor of the two-stage verify path: an *inexact*
+             (quantized) store scans approximately, keeps the best
+             k * rerank_mult survivors, and reranks them in fp32 against the
+             tail.  Exact stores ignore it.  Higher = closer to fp32 recall,
+             lower = less rerank bandwidth; 4 recovers fp32 top-k to within
+             ~1% recall on clustered data (see benchmarks/fig12_memory.py).
+use_gather_kernel
+             verification kernel toggle, one dispatch point for fp32
+             (`kernels.gather_l2`) and int8 (`kernels.gather_q`):
+             True = the scalar-prefetch Pallas gather kernels, False = the
+             dense jnp gather, None = the REPRO_GATHER_KERNEL env var when
+             set, else on for TPU backends only (interpret-mode Pallas on CPU
+             is correct but slow).
 """
 from __future__ import annotations
 
@@ -52,6 +69,9 @@ class SearchParams:
     max_gap: int = 2
     skip_budget: int | None = None
     inner: str = "lccs"
+    store: str | None = None
+    rerank_mult: int = 4
+    use_gather_kernel: bool | None = None
 
     def __post_init__(self):
         if self.inner == "segmented":
@@ -69,6 +89,11 @@ class SearchParams:
             raise ValueError(
                 f"skip_budget must be >= 1 or None, got {self.skip_budget} "
                 "(use probes=1 / source='lccs' to disable probing entirely)"
+            )
+        if self.rerank_mult < 1:
+            raise ValueError(
+                f"rerank_mult must be >= 1, got {self.rerank_mult} "
+                "(1 = no over-fetch: rerank exactly the top-k survivors)"
             )
         if self.mode not in ("parallel", "narrowed"):
             raise ValueError(

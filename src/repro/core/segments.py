@@ -52,6 +52,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.store import make_store
+
 from . import lsh as lsh_mod
 from .bruteforce import circ_run_lengths
 from .csa import CSA, build_csa
@@ -105,7 +107,11 @@ class SegmentedLCCSIndex:
 
     Pytree fields (traced under jit):
       family    shared LSH family (itself a pytree)
-      store     (cap_n, d) all vectors ever inserted, indexed by global id
+      store     `repro.store.VectorStore` over all vectors ever inserted,
+                indexed by global id (quantized stores quantize on ingest)
+      tail      (cap_n, d) fp32 rerank rows when the store is inexact; None
+                for fp32 stores (the dynamic index keeps its tail in memory
+                -- disk-lazy tails are a static-index feature)
       alive     (cap_n,) bool tombstone mask (False = deleted or unallocated)
       segments  tuple of immutable `Segment`s
       buf_h     (cap_b, m) delta-buffer hash strings, sentinel-padded
@@ -119,7 +125,7 @@ class SegmentedLCCSIndex:
     """
 
     family: Any
-    store: jax.Array
+    store: Any  # repro.store.VectorStore, global-id addressed
     alive: jax.Array
     segments: tuple[Segment, ...]
     buf_h: jax.Array
@@ -127,6 +133,11 @@ class SegmentedLCCSIndex:
     n_alloc: jax.Array
     buf_fill: jax.Array
     metric: str
+    tail: jax.Array | None = None
+
+    # a disk-lazy tail is a static-index feature; the attribute exists so the
+    # shared `core.index.search` verify path treats both index classes alike
+    tail_path = None
 
     # -- construction -------------------------------------------------------
 
@@ -137,14 +148,19 @@ class SegmentedLCCSIndex:
         m: int = 64,
         family: str = "euclidean",
         seed: int = 0,
+        store: str = "fp32",
         **family_kw,
     ) -> "SegmentedLCCSIndex":
         """An empty dynamic index over R^d (same family construction --
-        and therefore the same hash functions -- as `LCCSIndex.build`)."""
+        and therefore the same hash functions -- as `LCCSIndex.build`).
+        `store` picks the vector layout; quantized stores ("bf16"/"int8")
+        quantize each inserted batch on ingest and keep an in-memory fp32
+        tail for the exact rerank stage."""
         fam = lsh_mod.make_family(family, jax.random.key(seed), d, m, **family_kw)
+        vstore = make_store(store, jnp.zeros((_MIN_CAP, d), jnp.float32))
         return SegmentedLCCSIndex(
             family=fam,
-            store=jnp.zeros((_MIN_CAP, d), jnp.float32),
+            store=vstore,
             alive=jnp.zeros((_MIN_CAP,), bool),
             segments=(),
             buf_h=jnp.full((_MIN_CAP, m), _PAD_HASH, jnp.int32),
@@ -152,6 +168,7 @@ class SegmentedLCCSIndex:
             n_alloc=jnp.int32(0),
             buf_fill=jnp.int32(0),
             metric=fam.metric,
+            tail=None if vstore.exact else jnp.zeros((_MIN_CAP, d), jnp.float32),
         )
 
     @staticmethod
@@ -162,13 +179,15 @@ class SegmentedLCCSIndex:
         family: str = "euclidean",
         seed: int = 0,
         compact: bool = True,
+        store: str = "fp32",
         **family_kw,
     ) -> "SegmentedLCCSIndex":
         """Bulk-load: create + insert; `compact=True` immediately rolls the
         buffer into one CSA segment (the static-index layout)."""
         data = np.asarray(data, np.float32)
         idx = SegmentedLCCSIndex.create(
-            data.shape[1], m=m, family=family, seed=seed, **family_kw
+            data.shape[1], m=m, family=family, seed=seed, store=store,
+            **family_kw
         )
         idx.insert(data)
         if compact:
@@ -179,12 +198,13 @@ class SegmentedLCCSIndex:
 
     @property
     def data(self) -> jax.Array:
-        """Global-id-indexed vector store (what verification gathers from)."""
-        return self.store
+        """(cap_n, d) fp32 view of the vector store (exact tail when the
+        store is quantized)."""
+        return self.tail if self.tail is not None else self.store.dense()
 
     @property
     def d(self) -> int:
-        return self.store.shape[1]
+        return self.store.d
 
     @property
     def m(self) -> int:
@@ -216,6 +236,17 @@ class SegmentedLCCSIndex:
             tot += s.h.size * 4 + s.csa.I.size * 4 + s.csa.P.size * 4 + s.csa.Hd.size * 4
         return tot
 
+    def store_bytes(self) -> int:
+        """Resident vector bytes: store + in-memory fp32 tail (if inexact)."""
+        tot = self.store.nbytes()
+        if self.tail is not None:
+            tot += self.tail.size * 4
+        return tot
+
+    def total_bytes(self) -> int:
+        """Full serving footprint: search structure + resident vectors."""
+        return self.index_bytes() + self.store_bytes()
+
     # -- mutation (host-side, O(batch) on the buffer) ------------------------
 
     def insert(self, X) -> np.ndarray:
@@ -232,7 +263,9 @@ class SegmentedLCCSIndex:
         gids = np.arange(n_ids, n_ids + b, dtype=np.int32)
         self._grow_store(n_ids + b)
         rows = jnp.asarray(gids)
-        self.store = self.store.at[rows].set(X)
+        self.store = self.store.set_rows(rows, X)  # quantize on ingest
+        if self.tail is not None:
+            self.tail = self.tail.at[rows].set(X)
         self.alive = self.alive.at[rows].set(True)
         self._grow_buffer(fill + b)
         slots = jnp.arange(fill, fill + b)
@@ -320,8 +353,13 @@ class SegmentedLCCSIndex:
         old = alive.nonzero()[0]
         remap = np.full((n_ids,), -1, np.int32)
         remap[old] = np.arange(old.size, dtype=np.int32)
-        live_vecs = np.asarray(self.store)[old]
-        self.store = jnp.zeros((_MIN_CAP, self.d), jnp.float32)
+        # rebuild from the exact tail when present; requantization of already
+        # dequantized rows is lossless for the symmetric int8 layout
+        live_vecs = np.asarray(self.data)[old]
+        kind = self.store.kind
+        self.store = make_store(kind, jnp.zeros((_MIN_CAP, self.d), jnp.float32))
+        if self.tail is not None:
+            self.tail = jnp.zeros((_MIN_CAP, self.d), jnp.float32)
         self.alive = jnp.zeros((_MIN_CAP,), bool)
         self.buf_h = jnp.full((_MIN_CAP, self.m), _PAD_HASH, jnp.int32)
         self.buf_gid = jnp.full((_MIN_CAP,), -1, jnp.int32)
@@ -334,13 +372,15 @@ class SegmentedLCCSIndex:
         return remap
 
     def _grow_store(self, need: int) -> None:
-        cap = self.store.shape[0]
+        cap = self.store.n
         if need <= cap:
             return
         new_cap = _pow2_at_least(need)
-        self.store = jnp.concatenate(
-            [self.store, jnp.zeros((new_cap - cap, self.d), jnp.float32)]
-        )
+        self.store = self.store.padded_to(new_cap)
+        if self.tail is not None:
+            self.tail = jnp.concatenate(
+                [self.tail, jnp.zeros((new_cap - cap, self.d), jnp.float32)]
+            )
         self.alive = jnp.concatenate(
             [self.alive, jnp.zeros((new_cap - cap,), bool)]
         )
@@ -364,17 +404,20 @@ class SegmentedLCCSIndex:
         picks the per-segment candidate source; it is rewritten onto the
         "segmented" registry entry (source="segmented", inner=<source>)."""
         from .index import jit_search
+        from .verify import resolve_use_kernel
 
         p = params or SearchParams()
         if p.source != "segmented":
             p = p.replace(source="segmented", inner=p.source)
+        if p.use_gather_kernel is None:  # concrete bool -> jit cache key
+            p = p.replace(use_gather_kernel=resolve_use_kernel(None))
         return jit_search(self, jnp.asarray(queries, jnp.float32), p)
 
 
 jax.tree_util.register_dataclass(
     SegmentedLCCSIndex,
     data_fields=["family", "store", "alive", "segments", "buf_h", "buf_gid",
-                 "n_alloc", "buf_fill"],
+                 "n_alloc", "buf_fill", "tail"],
     meta_fields=["metric"],
 )
 
@@ -422,8 +465,8 @@ def segmented_source(index, queries, qh, params):
     parts_ids, parts_lcps = [], []
     for seg in index.segments:
         view = LCCSIndex(
-            family=index.family, data=index.store, h=seg.h, csa=seg.csa,
-            metric=index.metric,
+            family=index.family, store=index.store, h=seg.h, csa=seg.csa,
+            metric=index.metric, tail=index.tail,
         )
         local_ids, lcps = inner(view, queries, qh, params)
         g = jnp.where(

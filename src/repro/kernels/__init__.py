@@ -8,7 +8,9 @@ from .circrun.ops import circrun
 from .hash_rp.ops import hash_rp
 from .hash_xp.ops import hash_xp
 from .gather_l2.ops import gather_dist
+from .gather_q.ops import gather_dist_q
 from .flash_attn.ops import flash_attention
 from .ssm_scan.ops import ssm_scan
 
-__all__ = ["circrun", "hash_rp", "hash_xp", "gather_dist", "flash_attention", "ssm_scan"]
+__all__ = ["circrun", "hash_rp", "hash_xp", "gather_dist", "gather_dist_q",
+           "flash_attention", "ssm_scan"]

@@ -1,0 +1,3 @@
+from .ops import gather_dist_q
+
+__all__ = ["gather_dist_q"]

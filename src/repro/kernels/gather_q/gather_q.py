@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: scalar-prefetch gather of int8 rows + fused dequantize
+and L2/angular distance.
+
+Same DMA-pipeline shape as `gather_l2` (candidate ids prefetched to SMEM, the
+BlockSpec index_map turns each grid step's id into the HBM row to fetch), but
+the gathered row is the *quantized* representation: an (1, d) int8 code row
+plus its (1, 1) per-row scale.  Dequantization (a single multiply -- the
+store is symmetric, zero-point 0) is fused with the distance reduction, so
+the only HBM traffic per candidate is d bytes of codes + 4 bytes of scale:
+~4x less verify bandwidth than the fp32 kernel at large d.
+
+Grid (B, L): one candidate of one query per step; the int8 row DMA is
+double-buffered by the Pallas pipeline.  Output is the *squared* Euclidean
+distance (callers sqrt outside -- monotone, and it keeps the reduction in
+one fma chain) or 1 - cos for angular.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_q_kernel(ids_ref, code_ref, scale_ref, q_ref, o_ref, *, metric: str):
+    del ids_ref  # consumed by the index_maps
+    row = code_ref[...].astype(jnp.float32) * scale_ref[...]  # (1, d) dequant
+    qv = q_ref[...]  # (1, d)
+    if metric == "euclidean":
+        diff = row - qv
+        o_ref[...] = jnp.sum(diff * diff, axis=1, keepdims=True)
+    else:  # angular
+        rn = row / jnp.sqrt(jnp.sum(row * row, axis=1, keepdims=True))
+        qn = qv / jnp.sqrt(jnp.sum(qv * qv, axis=1, keepdims=True))
+        o_ref[...] = 1.0 - jnp.sum(rn * qn, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def gather_dist_q_pallas(
+    codes: jax.Array,  # (n, d) int8 quantized rows
+    scale: jax.Array,  # (n,) float32 per-row scale
+    ids: jax.Array,  # (B, L) int32 (negatives treated as row 0; mask outside)
+    queries: jax.Array,  # (B, d) float32
+    *,
+    metric: str = "euclidean",
+    interpret: bool = True,
+) -> jax.Array:
+    B, L = ids.shape
+    n, d = codes.shape
+    ids_c = jnp.maximum(ids, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_gather_q_kernel, metric=metric),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, L),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda b, l, ids_ref: (ids_ref[b, l], 0)),
+                pl.BlockSpec((1, 1), lambda b, l, ids_ref: (ids_ref[b, l], 0)),
+                pl.BlockSpec((1, d), lambda b, l, ids_ref: (b, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda b, l, ids_ref: (b, l)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, L), jnp.float32),
+        interpret=interpret,
+    )(ids_c, codes, scale.astype(jnp.float32)[:, None],
+      queries.astype(jnp.float32))
+    return out

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for quantized candidate verification."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret
+from .gather_q import gather_dist_q_pallas
+from .ref import gather_dist_q_ref
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "use_pallas"))
+def gather_dist_q(codes, scale, ids, queries, *, metric: str = "euclidean",
+                  use_pallas: bool = True):
+    """Dequantized distances of int8 candidates `ids` to `queries`; masked
+    (id < 0) slots -> +inf.  Euclidean distances are *squared* (as in
+    `gather_l2.gather_dist`); callers sqrt if they need metric distances."""
+    if use_pallas:
+        d = gather_dist_q_pallas(
+            codes, scale, ids, queries, metric=metric,
+            interpret=default_interpret(),
+        )
+    else:
+        d = gather_dist_q_ref(codes, scale, ids, queries, metric=metric)
+    return jnp.where(ids >= 0, d, jnp.inf)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the quantized gather + distance kernel."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def gather_dist_q_ref(
+    codes: jax.Array,  # (n, d) int8
+    scale: jax.Array,  # (n,) float32
+    ids: jax.Array,  # (B, L) int32 (clipped to >= 0 by caller)
+    queries: jax.Array,  # (B, d)
+    *,
+    metric: str = "euclidean",
+) -> jax.Array:
+    safe = jnp.maximum(ids, 0)
+    cand = codes[safe].astype(jnp.float32) * scale[safe][..., None]  # (B, L, d)
+    if metric == "euclidean":
+        return jnp.sum((cand - queries[:, None, :]) ** 2, axis=-1)
+    if metric == "angular":
+        cn = cand / jnp.linalg.norm(cand, axis=-1, keepdims=True)
+        qn = queries / jnp.linalg.norm(queries, axis=-1, keepdims=True)
+        return 1.0 - jnp.sum(cn * qn[:, None, :], axis=-1)
+    raise ValueError(metric)

@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS
-from repro.core import SearchParams, available_sources
+from repro.core import SearchParams, available_sources, available_stores
 from repro.data.synthetic import lm_token_batches
 from repro.models import api
 from repro.serve import RetrievalEngine
@@ -40,11 +40,20 @@ def main():
     ap.add_argument("--dynamic", action="store_true",
                     help="serve a SegmentedLCCSIndex and interleave "
                          "insert/delete/compact updates into the stream")
+    ap.add_argument("--store", default="fp32",
+                    choices=sorted(available_stores()),
+                    help="corpus-vector layout: fp32 = exact single-stage "
+                         "verify; bf16/int8 = quantized two-stage rerank")
+    ap.add_argument("--rerank-mult", type=int, default=4,
+                    help="two-stage over-fetch factor (quantized stores "
+                         "rerank the best k*rerank_mult survivors in fp32)")
     args = ap.parse_args()
 
     search_params = SearchParams.from_legacy(
         k=args.k, lam=args.lam, probes=args.probes
     )
+    search_params = search_params.replace(store=args.store,
+                                          rerank_mult=args.rerank_mult)
     if args.source:
         search_params = search_params.replace(source=args.source)
 
@@ -62,13 +71,15 @@ def main():
 
     engine = RetrievalEngine(cfg, params, m=args.m, metric="angular",
                              max_batch=args.max_batch,
-                             search_params=search_params)
+                             search_params=search_params,
+                             store=args.store)
     gen = lm_token_batches(vocab=cfg.vocab, seed=0)
     corpus, _ = gen(0, args.corpus, 32)
     t0 = time.time()
     engine.build_index(corpus, dynamic=args.dynamic)
     print(f"[launch.serve] indexed {args.corpus} docs in {time.time()-t0:.1f}s "
-          f"({engine.index.index_bytes()/1e6:.2f} MB, "
+          f"(index {engine.index.index_bytes()/1e6:.2f} MB + "
+          f"{args.store} store {engine.index.store_bytes()/1e6:.2f} MB, "
           f"{'dynamic' if args.dynamic else 'static'})")
 
     rng = np.random.default_rng(1)

@@ -45,13 +45,18 @@ class ServeStats:
 class RetrievalEngine:
     def __init__(self, cfg, params, *, m: int = 64, metric: str = "angular",
                  max_batch: int = 32,
-                 search_params: SearchParams = DEFAULT_PARAMS):
+                 search_params: SearchParams = DEFAULT_PARAMS,
+                 store: str = "fp32"):
         self.cfg = cfg
         self.params = params
         self.m = m
         self.metric = metric
         self.max_batch = max_batch
         self.search_params = search_params
+        # `store` picks the corpus-vector layout (repro.store): "fp32" serves
+        # exact single-stage verification; "bf16"/"int8" quantize on ingest
+        # and serve the two-stage rerank path (search_params.rerank_mult)
+        self.store = store
         self.index: LCCSIndex | None = None
         self.stats = ServeStats()
         self._embed = jax.jit(self._embed_fn)
@@ -70,11 +75,14 @@ class RetrievalEngine:
     def build_index(self, corpus_tokens: np.ndarray, *, seed: int = 0,
                     dynamic: bool = False):
         """Embed + index the corpus.  `dynamic=True` builds a
-        SegmentedLCCSIndex so `insert`/`delete`/`compact` work afterwards."""
+        SegmentedLCCSIndex so `insert`/`delete`/`compact` work afterwards.
+        The engine's `store` kind decides the vector layout; quantized
+        stores verify in two stages (insert paths quantize on ingest)."""
         emb = self.embed(corpus_tokens)
         fam = "angular" if self.metric == "angular" else "euclidean"
         cls = SegmentedLCCSIndex if dynamic else LCCSIndex
-        self.index = cls.build(emb, m=self.m, family=fam, seed=seed)
+        self.index = cls.build(emb, m=self.m, family=fam, seed=seed,
+                               store=self.store)
         return self.index
 
     # -- dynamic corpus (SegmentedLCCSIndex only) ----------------------------

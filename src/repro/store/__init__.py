@@ -1,0 +1,27 @@
+"""Pluggable corpus-vector stores (layout + quantization + distance scan).
+
+See `base` for the protocol/registry, `stores` for the built-in fp32 / bf16 /
+int8 layouts, and `tail` for the disk-lazy fp32 rerank tail.
+"""
+from .base import (
+    VectorStore,
+    available_stores,
+    get_store_cls,
+    make_store,
+    register_store,
+)
+from .stores import Bf16Store, Fp32Store, Int8Store
+from .tail import gather_tail, write_tail
+
+__all__ = [
+    "VectorStore",
+    "Fp32Store",
+    "Bf16Store",
+    "Int8Store",
+    "available_stores",
+    "get_store_cls",
+    "make_store",
+    "register_store",
+    "gather_tail",
+    "write_tail",
+]

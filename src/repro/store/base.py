@@ -1,0 +1,97 @@
+"""VectorStore protocol + registry: pluggable corpus-vector layouts.
+
+A *vector store* owns how corpus vectors are laid out in device memory, how
+they are (de)quantized, and how candidate distances are scanned against them.
+`LCCSIndex` / `SegmentedLCCSIndex` hold a store instead of a raw ``(n, d)``
+float32 array, decoupling the search structure (hash strings + CSA) from the
+verification storage -- the O(n * d * 4 bytes) term that dominates serving
+memory at scale.
+
+Protocol (all implementations are registered JAX pytrees, so an index holding
+any store stays a first-class JAX value under `jit`/`device_put`/sharding):
+
+  from_dense(x)                  build from (n, d) float32 rows
+  dense()                        (n, d) float32 reconstruction (dequantized)
+  gather(ids)                    (B, L, d) float32 rows for id matrix `ids`
+  gather_dist(ids, queries, metric=..., use_kernel=...)
+                                 (B, L) distances of gathered rows to queries
+                                 (the store picks its fused Pallas kernel or
+                                 the jnp reference path)
+  set_rows(rows, x)              functional row update (quantize on ingest)
+  padded_to(cap)                 grow to `cap` rows (zero padding)
+  nbytes()                       resident bytes of this representation
+  n / d / shape                  row count, dimensionality, (n, d)
+
+Class attributes:
+  kind   registry name ("fp32" | "bf16" | "int8" | ...)
+  exact  True when gather_dist returns exact fp32 distances (no rerank stage
+         needed); False for quantized stores, which the two-stage verify path
+         over-fetches by `SearchParams.rerank_mult` and reranks in fp32.
+
+New layouts (PQ codes, fp8, ...) plug in via `register_store` without
+touching the index classes.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+
+
+@runtime_checkable
+class VectorStore(Protocol):
+    kind: str
+    exact: bool
+
+    def dense(self) -> jax.Array: ...
+
+    def gather(self, ids: jax.Array) -> jax.Array: ...
+
+    def gather_dist(
+        self, ids: jax.Array, queries: jax.Array, *, metric: str,
+        use_kernel: bool = False,
+    ) -> jax.Array: ...
+
+    def set_rows(self, rows: jax.Array, x: jax.Array) -> "VectorStore": ...
+
+    def padded_to(self, cap: int) -> "VectorStore": ...
+
+    def nbytes(self) -> int: ...
+
+    @property
+    def n(self) -> int: ...
+
+    @property
+    def d(self) -> int: ...
+
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_store(cls: type | None = None, *, name: str | None = None):
+    """Register a VectorStore implementation (decorator or direct call).
+    The registry key defaults to the class's `kind` attribute."""
+
+    def deco(c: type) -> type:
+        _REGISTRY[name or c.kind] = c
+        return c
+
+    return deco(cls) if cls is not None else deco
+
+
+def get_store_cls(name: str) -> type:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown vector store {name!r}; available: {available_stores()}"
+        ) from None
+
+
+def available_stores() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_store(name: str, x) -> VectorStore:
+    """Quantize/lay out dense (n, d) float32 rows as the named store."""
+    return get_store_cls(name).from_dense(x)

@@ -1,0 +1,252 @@
+"""Built-in vector stores: fp32 (exact), bf16 and int8 (quantized).
+
+Memory per row of dimension d:
+
+  Fp32Store   4d bytes            exact -- the seed layout
+  Bf16Store   2d bytes            ~3 significand decimal digits
+  Int8Store   d + 4 bytes         per-row symmetric scale (zero-point == 0)
+
+`Int8Store` uses symmetric per-row quantization: ``scale = max|row| / 127``,
+``q = round(row / scale)`` clipped to [-127, 127].  Symmetry pins the
+zero-point at 0, so dequantization is a single multiply (q * scale) -- the
+form the fused `gather_q` Pallas kernel computes in-register after the row
+DMA.  The per-row absolute error is bounded by ``scale / 2 = max|row|/254``.
+
+Distance scanning (`gather_dist`) dispatches per store:
+
+  fp32   `kernels.gather_l2` scalar-prefetch Pallas kernel (use_kernel=True)
+         or the dense jnp gather (default on CPU)
+  int8   `kernels.gather_q` -- gathers int8 rows + per-row scale and computes
+         the dequantized distance fused in one pass (use_kernel=True), or the
+         jnp reference
+  bf16   jnp reference on upcast rows (no dedicated kernel: bf16 is a cast,
+         not a code)
+
+All stores return *ranking-consistent* distances (sqrt'd Euclidean / 1-cos
+angular, +inf on id < 0 padding) so the two-stage verify path can mix kernel
+and reference stages freely.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .base import register_store
+
+
+def _dist_rows(rows: jax.Array, queries: jax.Array, metric: str) -> jax.Array:
+    """(B, L, d) rows x (B, d) queries -> (B, L) distances (clamped norms:
+    degenerate zero vectors yield finite maximal distances, not NaN)."""
+    from repro.core.lsh import distance
+
+    return distance(rows, queries[:, None, :], metric)
+
+
+def _mask_pad(ids: jax.Array, dist: jax.Array) -> jax.Array:
+    return jnp.where(ids >= 0, dist, jnp.inf)
+
+
+# the gather kernels implement exactly these; any other metric (hamming, a
+# future registration) must take the reference path, not be mis-scored
+_KERNEL_METRICS = ("euclidean", "angular")
+
+
+def _fix_kernel_dist(d: jax.Array, metric: str) -> jax.Array:
+    """Reconcile the Pallas gather kernels with the reference semantics:
+    euclidean kernels return squared L2 (sqrt here -- monotone, same ranks),
+    and angular kernels divide by unclamped norms, so a zero vector yields
+    NaN where `lsh.distance`'s clamped norms yield 1.0 -- map NaN to 1.0 so
+    kernel and reference stages rank identically and can mix freely."""
+    if metric == "euclidean":
+        return jnp.sqrt(jnp.maximum(d, 0.0))
+    return jnp.where(jnp.isnan(d), 1.0, d)
+
+
+@dataclass
+class Fp32Store:
+    """Exact float32 rows -- the seed layout, now behind the store protocol."""
+
+    rows: jax.Array  # (n, d) float32
+
+    kind = "fp32"
+    exact = True
+
+    @staticmethod
+    def from_dense(x) -> "Fp32Store":
+        return Fp32Store(rows=jnp.asarray(x, jnp.float32))
+
+    def dense(self) -> jax.Array:
+        return self.rows
+
+    def gather(self, ids: jax.Array) -> jax.Array:
+        return self.rows[jnp.maximum(ids, 0)]
+
+    def gather_dist(self, ids, queries, *, metric: str, use_kernel: bool = False):
+        if use_kernel and metric in _KERNEL_METRICS:
+            from repro.kernels.gather_l2.ops import gather_dist
+
+            d = gather_dist(self.rows, ids, queries, metric=metric)
+            return _mask_pad(ids, _fix_kernel_dist(d, metric))
+        return _mask_pad(ids, _dist_rows(self.gather(ids), queries, metric))
+
+    def set_rows(self, rows, x) -> "Fp32Store":
+        return Fp32Store(rows=self.rows.at[rows].set(jnp.asarray(x, jnp.float32)))
+
+    def padded_to(self, cap: int) -> "Fp32Store":
+        n, d = self.rows.shape
+        if cap <= n:
+            return self
+        return Fp32Store(
+            rows=jnp.concatenate([self.rows, jnp.zeros((cap - n, d), jnp.float32)])
+        )
+
+    def nbytes(self) -> int:
+        return self.rows.size * 4
+
+    @property
+    def n(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.rows.shape[1]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return tuple(self.rows.shape)
+
+
+@dataclass
+class Bf16Store:
+    """bfloat16 rows: 2x smaller, ~2-3 significand digits, no code layout."""
+
+    rows: jax.Array  # (n, d) bfloat16
+
+    kind = "bf16"
+    exact = False
+
+    @staticmethod
+    def from_dense(x) -> "Bf16Store":
+        return Bf16Store(rows=jnp.asarray(x, jnp.float32).astype(jnp.bfloat16))
+
+    def dense(self) -> jax.Array:
+        return self.rows.astype(jnp.float32)
+
+    def gather(self, ids: jax.Array) -> jax.Array:
+        return self.rows[jnp.maximum(ids, 0)].astype(jnp.float32)
+
+    def gather_dist(self, ids, queries, *, metric: str, use_kernel: bool = False):
+        del use_kernel  # a bf16 gather is a cast away from the fp32 ref path
+        return _mask_pad(ids, _dist_rows(self.gather(ids), queries, metric))
+
+    def set_rows(self, rows, x) -> "Bf16Store":
+        q = jnp.asarray(x, jnp.float32).astype(jnp.bfloat16)
+        return Bf16Store(rows=self.rows.at[rows].set(q))
+
+    def padded_to(self, cap: int) -> "Bf16Store":
+        n, d = self.rows.shape
+        if cap <= n:
+            return self
+        return Bf16Store(
+            rows=jnp.concatenate([self.rows, jnp.zeros((cap - n, d), jnp.bfloat16)])
+        )
+
+    def nbytes(self) -> int:
+        return self.rows.size * 2
+
+    @property
+    def n(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.rows.shape[1]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return tuple(self.rows.shape)
+
+
+def _quantize_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8: q = round(x / scale), scale = max|row|/127.
+    Zero rows get scale 0 (and q 0), so dequantization stays a multiply."""
+    x = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+@dataclass
+class Int8Store:
+    """Symmetric per-row int8 quantization: ~3.9x smaller than fp32 at d=128.
+
+    Approximate by construction -- pair it with the two-stage verify path
+    (`SearchParams.rerank_mult`), which over-fetches stage-1 survivors and
+    reranks them against the fp32 tail.
+    """
+
+    q: jax.Array  # (n, d) int8 codes
+    scale: jax.Array  # (n,) float32 per-row scale (zero-point == 0)
+
+    kind = "int8"
+    exact = False
+
+    @staticmethod
+    def from_dense(x) -> "Int8Store":
+        q, scale = _quantize_rows(x)
+        return Int8Store(q=q, scale=scale)
+
+    def dense(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * self.scale[:, None]
+
+    def gather(self, ids: jax.Array) -> jax.Array:
+        safe = jnp.maximum(ids, 0)
+        return self.q[safe].astype(jnp.float32) * self.scale[safe][..., None]
+
+    def gather_dist(self, ids, queries, *, metric: str, use_kernel: bool = False):
+        if use_kernel and metric in _KERNEL_METRICS:
+            from repro.kernels.gather_q.ops import gather_dist_q
+
+            d = gather_dist_q(self.q, self.scale, ids, queries, metric=metric)
+            return _mask_pad(ids, _fix_kernel_dist(d, metric))
+        return _mask_pad(ids, _dist_rows(self.gather(ids), queries, metric))
+
+    def set_rows(self, rows, x) -> "Int8Store":
+        q, scale = _quantize_rows(x)
+        return Int8Store(
+            q=self.q.at[rows].set(q), scale=self.scale.at[rows].set(scale)
+        )
+
+    def padded_to(self, cap: int) -> "Int8Store":
+        n, d = self.q.shape
+        if cap <= n:
+            return self
+        return Int8Store(
+            q=jnp.concatenate([self.q, jnp.zeros((cap - n, d), jnp.int8)]),
+            scale=jnp.concatenate([self.scale, jnp.zeros((cap - n,), jnp.float32)]),
+        )
+
+    def nbytes(self) -> int:
+        return self.q.size * 1 + self.scale.size * 4
+
+    @property
+    def n(self) -> int:
+        return self.q.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.q.shape[1]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return tuple(self.q.shape)
+
+
+for _cls, _fields in ((Fp32Store, ["rows"]), (Bf16Store, ["rows"]),
+                      (Int8Store, ["q", "scale"])):
+    jax.tree_util.register_dataclass(_cls, data_fields=_fields, meta_fields=[])
+    register_store(_cls)

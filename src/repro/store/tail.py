@@ -1,0 +1,39 @@
+"""Disk-lazy fp32 tail for the two-stage rerank path.
+
+A quantized store answers the stage-1 approximate scan; the exact rerank of
+the few surviving candidates needs original fp32 rows.  Keeping those rows
+resident would cancel the quantization savings, so the *tail* can live on
+disk as a plain ``.npy`` and be gathered lazily -- per query batch the rerank
+touches only ``B * k * rerank_mult`` rows, which is memmap-friendly random
+access, not a scan.
+
+The tail is deliberately NOT a pytree: a disk gather cannot appear inside a
+traced computation.  `LCCSIndex.search` orchestrates the split pipeline
+(jitted stage 1 -> host gather -> jitted rerank) when `tail_path` is set;
+`jit_search` on such an index raises with that guidance.  Indexes built with
+`tail="memory"` (the default) keep the fp32 rows as an ordinary pytree leaf
+and the whole two-stage path compiles as one computation.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+
+def write_tail(path: str | Path, rows) -> str:
+    """Persist fp32 rows as an .npy memmap target; returns the path."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.save(path, np.asarray(rows, np.float32))
+    # np.save appends .npy when missing; report the real on-disk name
+    return str(path if path.suffix == ".npy" else path.with_suffix(path.suffix + ".npy"))
+
+
+def gather_tail(path: str | Path, ids) -> np.ndarray:
+    """Gather rows `ids` (any shape; negatives clipped to row 0) from the
+    on-disk tail without loading it: (..., d) float32."""
+    mm = np.load(path, mmap_mode="r")
+    flat = np.maximum(np.asarray(ids, np.int64).reshape(-1), 0)
+    rows = np.asarray(mm[flat], dtype=np.float32)
+    return rows.reshape(*np.shape(ids), mm.shape[1])

@@ -140,6 +140,31 @@ def test_legacy_query_shim_matches_new_api(dataset):
     np.testing.assert_allclose(np.asarray(d_old), np.asarray(d_new), rtol=1e-6)
 
 
+def test_legacy_candidates_shim_warns_and_matches(dataset):
+    """The `candidates` kwargs shim must emit DeprecationWarning and return
+    the same candidate set as the functional API with equivalent params."""
+    from repro.core.index import candidates as candidates_fn
+    from repro.core import SearchParams as SP
+
+    X, Q, gt = dataset
+    idx = LCCSIndex.build(X[:500], m=16, family="euclidean", w=4.0, seed=6)
+    with pytest.warns(DeprecationWarning, match="candidates"):
+        ids_old, lcps_old = idx.candidates(Q, 50, probes=5)
+    ids_new, lcps_new = candidates_fn(
+        idx, jnp.asarray(Q), SP.from_legacy(lam=50, probes=5)
+    )
+    np.testing.assert_array_equal(np.asarray(ids_old), np.asarray(ids_new))
+    np.testing.assert_array_equal(np.asarray(lcps_old), np.asarray(lcps_new))
+
+
+def test_legacy_query_shim_warns(dataset):
+    """`query` must warn (DeprecationWarning, not silent) on every call."""
+    X, Q, _ = dataset
+    idx = LCCSIndex.build(X[:300], m=16, family="euclidean", w=4.0, seed=6)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        idx.query(Q, k=3, lam=20)
+
+
 def test_index_bytes_linear_in_m():
     rng = np.random.default_rng(1)
     X = rng.normal(size=(256, 8)).astype(np.float32)

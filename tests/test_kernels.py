@@ -11,6 +11,8 @@ from repro.kernels.flash_attn.flash_attn import flash_attn_pallas
 from repro.kernels.flash_attn.ref import attn_ref
 from repro.kernels.gather_l2.gather_l2 import gather_dist_pallas
 from repro.kernels.gather_l2.ref import gather_dist_ref
+from repro.kernels.gather_q.gather_q import gather_dist_q_pallas
+from repro.kernels.gather_q.ref import gather_dist_q_ref
 from repro.kernels.hash_rp.hash_rp import hash_rp_pallas
 from repro.kernels.hash_rp.ref import hash_rp_ref
 from repro.kernels.hash_xp.hash_xp import hash_xp_pallas
@@ -78,6 +80,48 @@ def test_gather_l2_sweep(metric, B, L, n, d):
                              metric=metric, interpret=True)
     want = gather_dist_ref(jnp.asarray(data), jnp.asarray(ids), jnp.asarray(qs), metric=metric)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def _quantized(n, d):
+    data = RNG.normal(size=(n, d)).astype(np.float32)
+    amax = np.abs(data).max(axis=1)
+    scale = (amax / 127.0).astype(np.float32)
+    q = np.clip(np.round(data / np.where(scale > 0, scale, 1)[:, None]),
+                -127, 127).astype(np.int8)
+    return q, scale
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "angular"])
+@pytest.mark.parametrize("B,L,n,d", [(1, 1, 10, 8), (4, 13, 200, 50), (2, 64, 500, 128)])
+@pytest.mark.slow
+def test_gather_q_sweep(metric, B, L, n, d):
+    q, scale = _quantized(n, d)
+    ids = RNG.integers(0, n, (B, L)).astype(np.int32)
+    qs = RNG.normal(size=(B, d)).astype(np.float32)
+    got = gather_dist_q_pallas(jnp.asarray(q), jnp.asarray(scale),
+                               jnp.asarray(ids), jnp.asarray(qs),
+                               metric=metric, interpret=True)
+    want = gather_dist_q_ref(jnp.asarray(q), jnp.asarray(scale),
+                             jnp.asarray(ids), jnp.asarray(qs), metric=metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gather_q_matches_fp32_gather_within_quant_error():
+    """The fused dequant+distance must agree with the fp32 kernel on the
+    dequantized rows (quantization error only, no extra kernel error)."""
+    n, d, B, L = 300, 64, 3, 20
+    q, scale = _quantized(n, d)
+    deq = q.astype(np.float32) * scale[:, None]
+    ids = RNG.integers(0, n, (B, L)).astype(np.int32)
+    qs = RNG.normal(size=(B, d)).astype(np.float32)
+    got = gather_dist_q_pallas(jnp.asarray(q), jnp.asarray(scale),
+                               jnp.asarray(ids), jnp.asarray(qs),
+                               metric="euclidean", interpret=True)
+    want = gather_dist_pallas(jnp.asarray(deq), jnp.asarray(ids),
+                              jnp.asarray(qs), metric="euclidean", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("causal", [True, False])

@@ -34,7 +34,7 @@ def test_fig45_lccs_competitive_at_matched_hash_budget(data):
     X, Q, gt = data
     m = 64
     lccs = LCCSIndex.build(X, m=m, family="euclidean", w=16.0, seed=0)
-    r_lccs = _recall(lccs.query(Q, k=10, lam=200)[0], gt)
+    r_lccs = _recall(lccs.search(Q, SearchParams(k=10, lam=200))[0], gt)
     e2 = E2LSH.build(X, K=4, L=m // 4, w=16.0, seed=0)  # same 64 functions
     r_e2 = _recall(e2.query(Q, k=10, lam=200, cap_per_table=64)[0], gt)
     assert r_lccs >= r_e2 - 0.05, (r_lccs, r_e2)
@@ -50,8 +50,10 @@ def test_c2lsh_counting_touches_linear_candidates(data):
     # counting framework computes collision counts against ALL n objects
     counts_work = X.shape[0]  # per query, by construction of the indicator
     lccs = LCCSIndex.build(X, m=m, family="euclidean", w=16.0, seed=0)
+    from repro.core.index import candidates as candidates_fn
+
     lam = 200
-    ids, _ = lccs.candidates(Q, lam)
+    ids, _ = candidates_fn(lccs, Q, SearchParams(lam=lam))
     lccs_work = int((np.asarray(ids) >= 0).sum(axis=1).max())
     assert lccs_work <= lam < counts_work
 
@@ -62,7 +64,7 @@ def test_fig9_larger_m_helps_recall(data):
     recalls = []
     for m in (8, 32, 128):
         idx = LCCSIndex.build(X, m=m, family="euclidean", w=16.0, seed=1)
-        recalls.append(_recall(idx.query(Q, k=10, lam=200)[0], gt))
+        recalls.append(_recall(idx.search(Q, SearchParams(k=10, lam=200))[0], gt))
     assert recalls[-1] >= recalls[0] - 0.02, recalls
     assert max(recalls) >= 0.6
 
@@ -73,11 +75,14 @@ def test_fig10_probes_trade_index_size_for_recall(data):
     index's recall."""
     X, Q, gt = data
     small = LCCSIndex.build(X, m=16, family="euclidean", w=16.0, seed=2)
-    r1 = _recall(small.query(Q, k=10, lam=200, probes=1)[0], gt)
-    r33 = _recall(small.query(Q, k=10, lam=200, probes=33)[0], gt)
+    r1 = _recall(small.search(Q, SearchParams(k=10, lam=200))[0], gt)
+    r33 = _recall(
+        small.search(Q, SearchParams.from_legacy(k=10, lam=200, probes=33))[0],
+        gt,
+    )
     assert r33 >= r1  # probing never hurts at fixed budget here
     big = LCCSIndex.build(X, m=64, family="euclidean", w=16.0, seed=2)
-    r_big = _recall(big.query(Q, k=10, lam=200)[0], gt)
+    r_big = _recall(big.search(Q, SearchParams(k=10, lam=200))[0], gt)
     assert r33 >= r_big - 0.15  # approaches the big index
 
 
