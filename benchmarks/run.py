@@ -1,12 +1,13 @@
 """Benchmark harness: one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV rows and writes the search-perf
-trajectory (QPS / recall / index bytes per store x source) to
-``BENCH_search.json`` so successive PRs are comparable machine-readably.
+trajectory (QPS / recall / index bytes per store x source, plus the sharded
+QPS-scaling curve) to ``BENCH_search.json`` so successive PRs are comparable
+machine-readably.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--smoke]
   --quick  halve the dataset sizes
-  --smoke  fig12 (store sweep) only, tiny n -- the CI gate; still emits
-           BENCH_search.json
+  --smoke  fig12 (store sweep) + fig13 (sharded scaling) only, tiny n --
+           the CI gate; still emits BENCH_search.json
 """
 from __future__ import annotations
 
@@ -19,7 +20,16 @@ from .common import CsvRows
 
 
 def _write_bench_json(payload: dict, path: str | Path = "BENCH_search.json"):
+    import os
+
     payload = dict(payload, wall_s=round(payload.get("wall_s", 0.0), 1))
+    # absolute QPS on small shared-CPU runners swings +-50% run to run;
+    # record the environment so PR-over-PR comparisons weigh deltas sanely
+    payload["env"] = {
+        "cpu_count": os.cpu_count(),
+        "platform": sys.platform,
+        "devices": os.environ.get("XLA_FLAGS", ""),
+    }
     Path(path).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {path}")
 
@@ -30,11 +40,15 @@ def main() -> None:
     n = 4000 if quick else 8000
     csv = CsvRows()
     t0 = time.time()
-    from . import fig12_memory
+    from . import fig12_memory, fig13_sharded
 
     if smoke:
         print("# fig12 (smoke): recall vs store bytes / QPS per store", flush=True)
         search_perf = fig12_memory.run(csv, n=1500)
+        print("# fig13 (smoke): sharded QPS scaling + exact parity", flush=True)
+        search_perf["sharded"] = fig13_sharded.run(
+            csv, n=1200, shard_counts=(1, 2, 4), queries=32
+        )
         search_perf["wall_s"] = time.time() - t0
         search_perf["mode"] = "smoke"
         _write_bench_json(search_perf)
@@ -59,6 +73,10 @@ def main() -> None:
     fig11_dynamic.run(csv, n=n // 2)
     print("# fig12: recall vs store bytes / QPS per store", flush=True)
     search_perf = fig12_memory.run(csv, n=n)
+    print("# fig13: sharded QPS scaling + exact parity", flush=True)
+    search_perf["sharded"] = fig13_sharded.run(
+        csv, n=n, shard_counts=(1, 2, 4, 8), queries=32
+    )
     print("# table1: complexity scaling in n", flush=True)
     table1_scaling.run(csv)
     print("# kernels", flush=True)

@@ -1,5 +1,7 @@
-"""Distributed LCCS-LSH index across 8 (simulated) devices: database sharded
-over the data axis, shard-local dense LCCS scoring, exact global top-k merge.
+"""Sharded LCCS-LSH index across 8 (simulated) devices: corpus rows
+partitioned over the mesh's data axis, one CSA + vector-store slice per
+shard under a single shared LSH family, shard-local search + exact global
+top-k merge (`repro.shard.ShardedLCCSIndex`).
 
     python examples/distributed_index.py     (re-execs itself with 8 devices)
 """
@@ -16,43 +18,50 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LCCSIndex, make_family
-from repro.core.distributed import (
-    build_sharded_hashes,
-    distributed_query,
-    shard_database,
-)
+from repro.core import LCCSIndex, SearchParams
 from repro.data.synthetic import clustered_vectors, queries_from
-from repro.launch.mesh import make_debug_mesh
+from repro.shard import ShardedLCCSIndex, make_shard_mesh
 
 
 def main():
-    n, d, k = 32_000, 64, 10
+    n, d, k = 32_001, 64, 10  # deliberately uneven: 32001 rows over 8 shards
     X = clustered_vectors(n, d, n_clusters=64, seed=0)
     Q = queries_from(X, 16, jitter=0.3)
-    mesh = make_debug_mesh(8, 1)
-    print(f"mesh: {mesh.shape} over {len(jax.devices())} devices")
-
-    fam = make_family("euclidean", jax.random.key(0), d, 32, w=16.0)
-    Xs = shard_database(jnp.asarray(X), mesh)
-    h = build_sharded_hashes(fam, Xs, mesh)
-    print("hash strings:", h.shape, "sharding:", h.sharding.spec)
+    mesh = make_shard_mesh(8)
+    print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
 
     t0 = time.time()
-    ids, dists = distributed_query(fam, Xs, h, jnp.asarray(Q), mesh, k=k, lam=64)
-    print(f"distributed query: {(time.time()-t0)*1e3/len(Q):.2f} ms/query")
+    index = ShardedLCCSIndex.build(X, mesh=mesh, m=32, family="euclidean",
+                                   w=16.0, seed=0)
+    print(f"sharded build: {time.time()-t0:.2f}s -- {index.shards} shards x "
+          f"{index.rows_per_shard} rows (n={index.n}), "
+          f"index {index.index_bytes()/1e6:.1f} MB")
 
-    # exactness vs a single-device index with the same hash family budget
+    params = SearchParams(k=k, lam=64, source="lccs")
+    jax.block_until_ready(index.search(Q, params))  # warm the jit cache
+    t0 = time.time()
+    ids, dists = index.search(Q, params)
+    jax.block_until_ready(dists)
+    print(f"sharded query: {(time.time()-t0)*1e3/len(Q):.2f} ms/query")
+
+    # the same monolithic index, for comparison (identical hash family/seed);
+    # `mono.shard(mesh)` would reproduce `index` exactly
+    mono = LCCSIndex.build(X, m=32, family="euclidean", w=16.0, seed=0)
+    jax.block_until_ready(mono.search(Q, params))
+    t0 = time.time()
+    ids_m, d_m = mono.search(Q, params)
+    jax.block_until_ready(d_m)
+    print(f"monolithic query: {(time.time()-t0)*1e3/len(Q):.2f} ms/query")
+
     d2 = ((Q[:, None, :] - X[None, :, :]) ** 2).sum(-1)
     gt = np.argsort(d2, axis=1)[:, :k]
-    rec = np.mean([
-        len(set(np.asarray(ids[i]).tolist()) & set(gt[i].tolist())) / k
+    rec = lambda ii: np.mean([
+        len(set(np.asarray(ii[i]).tolist()) & set(gt[i].tolist())) / k
         for i in range(len(Q))
     ])
-    print(f"recall@{k} = {rec:.3f}")
+    print(f"recall@{k}: sharded={rec(ids):.3f} monolithic={rec(ids_m):.3f}")
 
 
 if __name__ == "__main__":

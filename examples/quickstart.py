@@ -21,6 +21,13 @@ Three ideas to take away:
      for fp32) and search switches to a two-stage path -- approximate scan,
      then exact fp32 rerank of the best k * `rerank_mult` survivors -- that
      stays within ~1% recall of fp32 at rerank_mult=4.
+  6. Multi-device serving shards the *index*, not the scan:
+     `index.shard(make_shard_mesh(S))` partitions rows over S devices (one
+     CSA + store slice per shard, shared family) and `search` runs
+     shard-local pipelines + an exact global top-k merge under shard_map.
+     On CPU, fake devices come from
+     XLA_FLAGS=--xla_force_host_platform_device_count=N (set before jax
+     starts -- see examples/distributed_index.py, which re-execs itself).
 
 The old kwargs API (`index.query(Q, k=10, lam=200, probes=17)`) still works
 but is deprecated; it forwards to `search` via `SearchParams.from_legacy`.
@@ -109,6 +116,20 @@ def main():
     ids_disk, _ = disk_idx.search(Q, SearchParams(k=k, lam=200))
     print(f"int8 + disk tail: resident {disk_idx.store_bytes()/1e6:.2f} MB, "
           f"recall@{k}={recall(ids_disk):.3f}")
+
+    # -- sharded serving: partition the index over the visible devices ------
+    # A 1-device mesh runs the identical shard_map pipeline (shard-local
+    # search + exact global top-k merge); with more devices -- real ones, or
+    # XLA_FLAGS=--xla_force_host_platform_device_count=N fakes on CPU --
+    # rows split across shards and the merge stays exact.  `launch.serve
+    # --shards N` serves this layout end to end.
+    from repro.shard import make_shard_mesh
+
+    n_dev = len(jax.devices())
+    sharded = index.shard(make_shard_mesh(n_dev))
+    ids_sh, _ = sharded.search(Q, SearchParams(k=k, lam=200))
+    print(f"sharded index: {sharded.shards} shard(s) x "
+          f"{sharded.rows_per_shard} rows, recall@{k}={recall(ids_sh):.3f}")
 
     p = Path("/tmp/lccs_quickstart.idx")
     index.save(p)

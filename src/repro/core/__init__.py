@@ -36,6 +36,12 @@ from . import multiprobe, theory
 # of the index-construction vocabulary (LCCSIndex.build(store=...))
 from repro.store import available_stores, make_store
 
+# importing repro.shard registers the "sharded" candidate source.  Plain
+# `import` (no attribute access) so the reentrant case -- repro.shard itself
+# importing repro.core first -- stays safe with this module mid-init; the
+# sharded names (ShardedLCCSIndex, make_shard_mesh) live in repro.shard.
+import repro.shard as _shard  # noqa: E402,F401
+
 __all__ = [
     "CSA",
     "LCCSIndex",

@@ -1,36 +1,32 @@
-"""Distributed LCCS-LSH index (DESIGN.md §4.3 / §5).
+"""Deprecated: the pre-`repro.shard` distributed sketch, now a thin shim.
 
-Database sharded over the mesh's data-parallel axis; each shard holds its own
-CSA over its local strings.  A query is broadcast, each shard runs a local
-lambda-LCCS search + verification, and a global top-k merge (all_gather of
-the per-shard top-k) produces the answer.  Exact w.r.t. the single-index
-result because LCCS scoring is pointwise per object.
+The real subsystem is `repro.shard.ShardedLCCSIndex`: per-shard CSAs + vector
+stores under one shared family, any registered candidate source per shard,
+two-stage verification, and an all_gather + exact global top-k merge -- all
+driven by `SearchParams`.  Prefer::
 
-The hashing matmul itself is sharded over the model axis (m hash functions
-split), all-gathered to form full hash strings -- the same layout the serving
-stack uses for embeddings.
+    from repro.shard import ShardedLCCSIndex, make_shard_mesh
+    index = ShardedLCCSIndex.build(X, mesh=make_shard_mesh(4), m=64)
+    ids, dists = index.search(Q, SearchParams(k=10, lam=200))
 
-Everything is expressed with shard_map so the collective schedule is explicit
-and auditable in the dry-run HLO.
+`distributed_query` below keeps the seed-era brute-force signature for old
+callers, re-expressed over the sharded index.  This also fixes the seed bug
+where global ids were computed as ``shard_id * (n // n_shards)`` -- silently
+wrong whenever ``n % n_shards != 0``; the sharded layout carries true
+per-shard row offsets (gid arrays) and pads/masks uneven splits exactly.
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
-
-from .bruteforce import circ_run_lengths
-from .csa import build_csa
-from .search import _search_parallel_1q
-from . import lsh as lsh_mod
 
 
 def shard_database(data: jax.Array, mesh: Mesh, axis: str = "data") -> jax.Array:
-    """Place (n, d) data with rows sharded over `axis` (n must divide evenly)."""
+    """Place (n, d) data with rows sharded over `axis` (n must divide evenly;
+    `repro.shard.shard_index` handles uneven corpora by padding)."""
     return jax.device_put(data, NamedSharding(mesh, P(axis, None)))
 
 
@@ -47,8 +43,8 @@ def build_sharded_hashes(family, data: jax.Array, mesh: Mesh, axis: str = "data"
 
 def distributed_query(
     family,
-    data: jax.Array,  # (n, d) sharded over data axis
-    h: jax.Array,  # (n, m) sharded over data axis
+    data: jax.Array,  # (n, d), possibly sharded over the data axis
+    h: jax.Array,  # (n, m), possibly sharded over the data axis
     queries: jax.Array,  # (B, d) replicated
     mesh: Mesh,
     *,
@@ -57,47 +53,34 @@ def distributed_query(
     metric: str = "euclidean",
     axis: str = "data",
 ):
-    """Shard-local brute-force LCCS scoring + global top-k merge.
-
-    Uses the dense circular-run scorer per shard (each shard holds n/P rows --
-    the regime where the dense path beats pointer-chasing; see DESIGN.md §3).
+    """Deprecated shim: shard-local brute-force LCCS scoring + exact global
+    top-k merge, now routed through `repro.shard`.  Handles n % n_shards != 0
+    correctly (the seed version silently mis-addressed global ids).
     Returns (global_ids (B, k), dists (B, k)).
-    """
-    n = data.shape[0]
-    n_shards = mesh.shape[axis]
-    qh = family.hash(queries)  # small, replicated
 
-    def local(data_l, h_l, queries_l, qh_l):
-        # shard-local top-k by LCCS length, then verify true distances locally
-        shard_id = jax.lax.axis_index(axis)
-        base = shard_id * (n // n_shards)
-
-        def one(q_vec, q_hash):
-            lengths = circ_run_lengths(h_l, q_hash)
-            kk = min(lam, h_l.shape[0])
-            _, idx = jax.lax.top_k(lengths, kk)
-            cand = data_l[idx]
-            dist = lsh_mod.distance(cand, q_vec[None, :], metric)
-            kd = min(k, kk)
-            neg, di = jax.lax.top_k(-dist, kd)
-            return idx[di] + base, -neg
-
-        ids, dists = jax.vmap(one)(queries_l, qh_l)  # (B, kd)
-        # gather every shard's top-k and merge
-        all_ids = jax.lax.all_gather(ids, axis, axis=1)  # (B, P, kd)
-        all_d = jax.lax.all_gather(dists, axis, axis=1)
-        all_ids = all_ids.reshape(ids.shape[0], -1)
-        all_d = all_d.reshape(ids.shape[0], -1)
-        neg, sel = jax.lax.top_k(-all_d, k)
-        return jnp.take_along_axis(all_ids, sel, axis=1), -neg
-
-    specs_in = (
-        P(axis, None),  # data rows sharded
-        P(axis, None),  # hash rows sharded
-        P(),  # queries replicated
-        P(),  # query hashes replicated
+    Note: every call rebuilds the sharded index (host copy of data/h, padding,
+    device placement) -- fine for one-off queries, wasteful in a loop.  Batch
+    callers should build a `ShardedLCCSIndex` once and reuse it."""
+    warnings.warn(
+        "repro.core.distributed.distributed_query is deprecated; build a "
+        "repro.shard.ShardedLCCSIndex and call index.search(queries, "
+        "SearchParams(...)) instead",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    fn = shard_map(
-        local, mesh=mesh, in_specs=specs_in, out_specs=(P(), P()), check_rep=False
+    from repro.shard import shard_index
+    from repro.store import stores as store_mod
+
+    from .index import LCCSIndex
+    from .params import SearchParams
+
+    mono = LCCSIndex(
+        family=family,
+        store=store_mod.Fp32Store.from_dense(np.asarray(data)),
+        h=jax.numpy.asarray(np.asarray(h)),
+        csa=None,  # brute-force scoring needs no CSA
+        metric=metric,
     )
-    return fn(data, h, queries, qh)
+    sharded = shard_index(mono, mesh, axis=axis)
+    params = SearchParams(k=k, lam=lam, source="bruteforce", metric=metric)
+    return sharded.search(queries, params)

@@ -218,6 +218,18 @@ class LCCSIndex:
                                           p.metric or self.metric)
         return jit_search(self, queries, p)
 
+    # -- multi-device partitioning ------------------------------------------
+
+    def shard(self, mesh, *, axis: str = "data"):
+        """Partition this index's rows over `mesh`'s `axis`: one CSA + one
+        vector-store slice per shard under the shared family.  Returns a
+        `repro.shard.ShardedLCCSIndex` serving the same SearchParams pipeline
+        via shard_map + exact global top-k merge (uneven row counts are
+        padded and masked, never mis-addressed)."""
+        from repro.shard import shard_index
+
+        return shard_index(self, mesh, axis=axis)
+
     # -- legacy kwargs shims (deprecated) -----------------------------------
 
     def query(self, queries, k: int = 10, lam: int = 100, **kw):
@@ -336,6 +348,12 @@ jax.tree_util.register_dataclass(
 def candidates(index: LCCSIndex, queries: jax.Array, params: SearchParams):
     """Candidate generation only: dispatch to the registered source.
     Returns (ids, lcps): (B, lam) each, -1 padded."""
+    if getattr(index, "sharded", False) and params.source != "sharded":
+        raise TypeError(
+            f"a ShardedLCCSIndex holds per-shard CSAs; source="
+            f"{params.source!r} would read them as one flat index -- use "
+            f"SearchParams(source='sharded', inner={params.source!r})"
+        )
     queries = jnp.asarray(queries, dtype=jnp.float32)
     qh = index.family.hash(queries)
     return get_source(params.source)(index, queries, qh, params)
@@ -349,6 +367,12 @@ def search(index: LCCSIndex, queries: jax.Array, params: SearchParams):
     exact stores, approximate-scan + fp32 rerank for quantized ones (see
     `repro.core.verify`).  A disk-lazy tail cannot be traced -- use
     `index.search`, which orchestrates the split pipeline on the host."""
+    if getattr(index, "sharded", False):
+        raise TypeError(
+            "a ShardedLCCSIndex verifies per shard before the global merge; "
+            "call index.search(queries, params) or repro.shard.search -- "
+            "this monolithic pipeline would mis-gather its stacked store"
+        )
     if not index.store.exact and index.tail is None and index.tail_path:
         raise ValueError(
             "this index's fp32 rerank tail is disk-lazy (tail_path="

@@ -28,10 +28,15 @@ skip_budget  static cap on re-searched shifts per (query, probe) in the
              "multiprobe-skip" source.  None = a heuristic cap (16 shifts per
              perturbation term, clipped to m); set it to m (or larger) for
              exact §4.2 semantics, or lower to trade recall for speed.
-inner        per-segment candidate source run by the "segmented" source
-             (`repro.core.segments.SegmentedLCCSIndex`); ignored by every
-             other source.  `SegmentedLCCSIndex.search` sets it for you by
-             rewriting source=<name> to (source="segmented", inner=<name>).
+inner        per-part candidate source run by the wrapping "segmented"
+             (`repro.core.segments.SegmentedLCCSIndex`) and "sharded"
+             (`repro.shard.ShardedLCCSIndex`) sources; ignored by every
+             other source.  The index `search` methods set it for you by
+             rewriting source=<name> to (source=<wrapper>, inner=<name>).
+shards       expected shard count of a `ShardedLCCSIndex` (None accepts any).
+             Like `store`, it documents -- and pins -- the topology a serving
+             config runs against: a mismatch raises before tracing.
+             Monolithic and segmented indexes ignore it.
 store        expected vector-store kind for the verify scan ("fp32" | "bf16"
              | "int8"); None accepts whatever the index holds.  A mismatch
              raises at trace time -- the field documents (and pins) which
@@ -72,13 +77,16 @@ class SearchParams:
     store: str | None = None
     rerank_mult: int = 4
     use_gather_kernel: bool | None = None
+    shards: int | None = None
 
     def __post_init__(self):
-        if self.inner == "segmented":
+        if self.inner in ("segmented", "sharded"):
             raise ValueError(
-                "inner='segmented' would recurse; pick a per-segment source "
+                f"inner={self.inner!r} would recurse; pick a per-part source "
                 "such as 'lccs', 'bruteforce', or 'multiprobe-skip'"
             )
+        if self.shards is not None and self.shards < 1:
+            raise ValueError(f"shards must be >= 1 or None, got {self.shards}")
         if self.k < 1:
             raise ValueError(f"k must be >= 1, got {self.k}")
         if self.lam < 1:

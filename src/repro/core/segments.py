@@ -2,9 +2,9 @@
 segment stack (beyond-paper; the paper's indexing phase §4.1 is build-once).
 
 Why this shape: LCCS candidate scoring is pointwise per object, so per-segment
-top-lambda candidate sets merge *exactly* (the same property
-`core.distributed` exploits across shards).  That makes a mutable corpus an
-LSM problem, not an algorithm problem:
+top-lambda candidate sets merge *exactly* (the same property `repro.shard`
+exploits across device shards).  That makes a mutable corpus an LSM problem,
+not an algorithm problem:
 
   * a small append-only *delta buffer* holds the newest hash strings and is
     scored brute-force with `circ_run_lengths` (exact LCCS lengths; the dense

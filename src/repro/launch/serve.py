@@ -1,13 +1,20 @@
 """Serving launcher: backbone + LCCS-LSH retrieval over a corpus.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
-        --corpus 512 --requests 128 [--ckpt-dir /tmp/run1]
+        --corpus 512 --requests 128 [--ckpt-dir /tmp/run1] [--shards 4]
 Loads trained weights from --ckpt-dir when present (the train launcher's
 output), otherwise serves from random init (layout/perf testing).
+
+--shards N partitions the index over N devices (repro.shard): shard-local
+search + exact global top-k merge.  On a CPU host with fewer visible devices
+the launcher re-execs itself once with
+XLA_FLAGS=--xla_force_host_platform_device_count=N (the CI trick).
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import jax
@@ -20,6 +27,27 @@ from repro.data.synthetic import lm_token_batches
 from repro.models import api
 from repro.serve import RetrievalEngine
 from repro.train.step import init_train_state
+
+
+def _ensure_devices(n_shards: int) -> None:
+    """Guarantee >= n_shards visible devices.  On CPU, re-exec once with the
+    host-platform device-count flag (it must be set before jax initialises
+    its backends, so a plain env mutation inside this process is too late)."""
+    if n_shards <= 1 or len(jax.devices()) >= n_shards:
+        return
+    if jax.default_backend() != "cpu" or os.environ.get("_REPRO_SERVE_REEXEC"):
+        raise RuntimeError(
+            f"--shards {n_shards} needs {n_shards} devices, have "
+            f"{len(jax.devices())} on backend {jax.default_backend()!r}"
+        )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n_shards}"
+    ).strip()
+    env["_REPRO_SERVE_REEXEC"] = "1"
+    os.execve(sys.executable,
+              [sys.executable, "-m", "repro.launch.serve"] + sys.argv[1:], env)
 
 
 def main():
@@ -47,13 +75,25 @@ def main():
     ap.add_argument("--rerank-mult", type=int, default=4,
                     help="two-stage over-fetch factor (quantized stores "
                          "rerank the best k*rerank_mult survivors in fp32)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="partition the index over this many devices "
+                         "(shard-local search + exact global top-k merge); "
+                         "on CPU the launcher re-execs with a fake "
+                         "multi-device host platform when needed")
     args = ap.parse_args()
+
+    if args.shards > 1 and args.dynamic:
+        ap.error("--shards and --dynamic are mutually exclusive "
+                 "(the sharded layout is static)")
+    _ensure_devices(args.shards)
 
     search_params = SearchParams.from_legacy(
         k=args.k, lam=args.lam, probes=args.probes
     )
     search_params = search_params.replace(store=args.store,
                                           rerank_mult=args.rerank_mult)
+    if args.shards > 1:
+        search_params = search_params.replace(shards=args.shards)
     if args.source:
         search_params = search_params.replace(source=args.source)
 
@@ -72,15 +112,18 @@ def main():
     engine = RetrievalEngine(cfg, params, m=args.m, metric="angular",
                              max_batch=args.max_batch,
                              search_params=search_params,
-                             store=args.store)
+                             store=args.store,
+                             shards=args.shards if args.shards > 1 else None)
     gen = lm_token_batches(vocab=cfg.vocab, seed=0)
     corpus, _ = gen(0, args.corpus, 32)
     t0 = time.time()
     engine.build_index(corpus, dynamic=args.dynamic)
+    layout = ("dynamic" if args.dynamic
+              else f"{args.shards} shards" if args.shards > 1 else "static")
     print(f"[launch.serve] indexed {args.corpus} docs in {time.time()-t0:.1f}s "
           f"(index {engine.index.index_bytes()/1e6:.2f} MB + "
           f"{args.store} store {engine.index.store_bytes()/1e6:.2f} MB, "
-          f"{'dynamic' if args.dynamic else 'static'})")
+          f"{layout})")
 
     rng = np.random.default_rng(1)
     picks = rng.integers(0, args.corpus, args.requests)

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core import LCCSIndex, SearchParams, SegmentedLCCSIndex, jit_search
 from repro.models import lm
+from repro.shard import ShardedLCCSIndex, make_shard_mesh
 
 DEFAULT_PARAMS = SearchParams(k=5, lam=64)
 
@@ -46,7 +47,7 @@ class RetrievalEngine:
     def __init__(self, cfg, params, *, m: int = 64, metric: str = "angular",
                  max_batch: int = 32,
                  search_params: SearchParams = DEFAULT_PARAMS,
-                 store: str = "fp32"):
+                 store: str = "fp32", shards: int | None = None):
         self.cfg = cfg
         self.params = params
         self.m = m
@@ -57,6 +58,9 @@ class RetrievalEngine:
         # exact single-stage verification; "bf16"/"int8" quantize on ingest
         # and serve the two-stage rerank path (search_params.rerank_mult)
         self.store = store
+        # shards > 1 partitions the built index over that many devices
+        # (repro.shard): shard-local search + exact global top-k merge
+        self.shards = shards
         self.index: LCCSIndex | None = None
         self.stats = ServeStats()
         self._embed = jax.jit(self._embed_fn)
@@ -66,20 +70,32 @@ class RetrievalEngine:
         emb = jnp.mean(hidden, axis=1)
         return emb / jnp.linalg.norm(emb, axis=-1, keepdims=True)
 
-    def embed(self, tokens: np.ndarray) -> np.ndarray:
+    def embed(self, tokens: np.ndarray) -> jax.Array:
         out = []
         for lo in range(0, tokens.shape[0], self.max_batch):
-            out.append(np.asarray(self._embed(jnp.asarray(tokens[lo : lo + self.max_batch]))))
-        return np.concatenate(out)
+            out.append(self._embed(jnp.asarray(tokens[lo : lo + self.max_batch])))
+        return out[0] if len(out) == 1 else jnp.concatenate(out)
 
     def build_index(self, corpus_tokens: np.ndarray, *, seed: int = 0,
                     dynamic: bool = False):
         """Embed + index the corpus.  `dynamic=True` builds a
         SegmentedLCCSIndex so `insert`/`delete`/`compact` work afterwards.
         The engine's `store` kind decides the vector layout; quantized
-        stores verify in two stages (insert paths quantize on ingest)."""
+        stores verify in two stages (insert paths quantize on ingest).
+        With `shards` > 1 the built index is partitioned over that many
+        devices (static corpora only -- the sharded layout is immutable)."""
         emb = self.embed(corpus_tokens)
         fam = "angular" if self.metric == "angular" else "euclidean"
+        if self.shards and self.shards > 1:
+            if dynamic:
+                raise ValueError(
+                    "sharded serving needs a static corpus: shards > 1 and "
+                    "dynamic=True are mutually exclusive"
+                )
+            self.index = LCCSIndex.build(
+                emb, m=self.m, family=fam, seed=seed, store=self.store
+            ).shard(make_shard_mesh(self.shards))
+            return self.index
         cls = SegmentedLCCSIndex if dynamic else LCCSIndex
         self.index = cls.build(emb, m=self.m, family=fam, seed=seed,
                                store=self.store)
@@ -133,16 +149,20 @@ class RetrievalEngine:
         """One micro-batched serving step.  Returns (ids, dists)."""
         assert self.index is not None, "build_index first"
         p = self._resolve_params(params, legacy)
-        t0 = time.time()
+        t0 = time.perf_counter()
         q_emb = self.embed(query_tokens)
-        t1 = time.time()
-        if isinstance(self.index, SegmentedLCCSIndex):
-            # rewrites p onto the "segmented" source (inner=p.source)
+        # the embedding is dispatched asynchronously: without an explicit
+        # block the device work would drain inside the search timing below,
+        # silently crediting embed time to search_s
+        jax.block_until_ready(q_emb)
+        t1 = time.perf_counter()
+        if isinstance(self.index, (SegmentedLCCSIndex, ShardedLCCSIndex)):
+            # rewrites p onto the wrapping "segmented"/"sharded" source
             ids, dists = self.index.search(jnp.asarray(q_emb), p)
         else:
             ids, dists = jit_search(self.index, jnp.asarray(q_emb), p)
         jax.block_until_ready(dists)
-        t2 = time.time()
+        t2 = time.perf_counter()
         self.stats.requests += query_tokens.shape[0]
         self.stats.batches += 1
         self.stats.embed_s += t1 - t0
@@ -163,6 +183,10 @@ class RetrievalEngine:
 
         Updates flush queued queries first, so results stay in stream order
         and every query is answered against the corpus state at its arrival.
+        Mixed token lengths are fine: a query whose length differs from the
+        queued batch flushes it first, so every micro-batch is rectangular
+        (np.stack would otherwise die on the ragged stack) and no query is
+        ever padded with tokens it did not contain.
         Returns one entry per request: (ids, dists) for queries, the ack
         tuples above for updates."""
         p = self._resolve_params(params, legacy)
@@ -190,6 +214,9 @@ class RetrievalEngine:
                 else:
                     raise ValueError(f"unknown stream op {op!r}")
                 continue
+            r = np.asarray(r)
+            if queue and r.shape != queue[0].shape:
+                flush()  # length change: close the rectangular micro-batch
             queue.append(r)
             if len(queue) >= self.max_batch:
                 flush()

@@ -1,0 +1,24 @@
+"""Sharded multi-device LCCS-LSH serving.
+
+`ShardedLCCSIndex` partitions a corpus over a mesh axis -- one CSA and one
+`VectorStore` slice per shard under a single shared LSH family -- and serves
+the full hash -> candidate-source -> two-stage-verify pipeline with
+`shard_map`, finished by an all_gather + exact global top-k merge.  Importing
+this package registers the "sharded" candidate source.
+
+    from repro.shard import ShardedLCCSIndex, make_shard_mesh
+
+    index = ShardedLCCSIndex.build(X, mesh=make_shard_mesh(4), m=64)
+    ids, dists = index.search(Q, SearchParams(k=10, lam=200))
+"""
+from .index import ShardedLCCSIndex, make_shard_mesh, shard_index
+from .search import jit_sharded_search, search, sharded_source
+
+__all__ = [
+    "ShardedLCCSIndex",
+    "make_shard_mesh",
+    "shard_index",
+    "search",
+    "jit_sharded_search",
+    "sharded_source",
+]

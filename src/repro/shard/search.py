@@ -1,0 +1,208 @@
+"""Sharded query pipeline: shard_map over per-shard LCCS search + verify,
+finished by an all_gather + exact global top-k merge.
+
+Every shard runs the SAME pipeline a monolithic `LCCSIndex` runs over its
+local rows -- the registered candidate source named by ``params.inner``
+(``params.source`` is "sharded"), then candidate verification against the
+shard's own `VectorStore` slice:
+
+  exact stores   shard-local exact distances -> local top-k ->
+                 all_gather (B, S, k) -> global top-k.  Identical to the
+                 monolithic result over the union of per-shard candidates
+                 (LCCS scoring and verification are pointwise per row).
+  inexact stores per-shard stage-1 approximate scan keeps the best
+                 R = min(k * rerank_mult, lam) local survivors and gathers
+                 their fp32 tail rows; survivors (ids, approx dists, rows)
+                 are all_gather'd, cut back to the best R globally by approx
+                 distance -- reproducing the monolithic two-stage survivor
+                 set -- and reranked exactly once, replicated on every shard.
+
+Global ids come from the per-shard `gid` arrays (true row offsets), so uneven
+splits are exact: padded rows carry gid = -1 and are masked out before the
+merge, never silently aliased onto real rows (the `shard_id * (n // S)`
+arithmetic of the old `core.distributed` sketch was wrong whenever
+``n % S != 0``).
+
+The "sharded" candidate-source registry entry exposes candidate generation
+alone (global ids, merged by LCP), so `jit_candidates` and any code built on
+the source registry composes with a `ShardedLCCSIndex` unchanged.
+
+Everything is expressed with `shard_map` so the collective schedule (one
+all_gather of k or R rows per shard per query batch) is explicit and
+auditable in the dry-run HLO.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import verify as verify_mod
+from repro.core.csa import CSA
+from repro.core.index import LCCSIndex
+from repro.core.params import SearchParams
+from repro.core.search import dedupe_topk
+from repro.core.sources import get_source, register_source
+
+from .index import ShardedLCCSIndex, _row_spec
+
+
+def _inner_name(params: SearchParams) -> str:
+    return params.inner if params.source == "sharded" else params.source
+
+
+def _local_view(family, store, h, csa, gid, tail, metric):
+    """Rebuild a plain LCCSIndex over one shard's rows from the size-1
+    leading-axis blocks shard_map hands the local function."""
+    sq = lambda t: jax.tree.map(lambda x: x[0], t)
+    view = LCCSIndex(
+        family=family,
+        store=sq(store),
+        h=h[0],
+        csa=None if csa is None else CSA(*(x[0] for x in csa)),
+        metric=metric,
+        tail=None if tail is None else tail[0],
+    )
+    return view, gid[0]
+
+
+def _to_global(ids_local: jax.Array, gid_l: jax.Array) -> jax.Array:
+    """Map shard-local candidate ids to global ids; -1 padding (and local
+    padded rows, gid -1) stays -1."""
+    rows = gid_l.shape[0]
+    g = jnp.where(ids_local >= 0, gid_l[jnp.clip(ids_local, 0, rows - 1)], -1)
+    return g
+
+
+def _shard_call(index: ShardedLCCSIndex, local_fn, out_specs):
+    """shard_map plumbing shared by search and the "sharded" source: the
+    index's pytrees go in row-partitioned over `index.axis`, the family and
+    the queries replicated."""
+    axis = index.axis
+    rep = lambda t: jax.tree.map(lambda _: P(), t)
+    shd = lambda t: jax.tree.map(lambda x: _row_spec(x, axis), t)
+    return shard_map(
+        local_fn,
+        mesh=index.mesh,
+        in_specs=(
+            rep(index.family),
+            shd(index.store),
+            _row_spec(index.h, axis),
+            shd(index.csa),
+            _row_spec(index.gid, axis),
+            shd(index.tail),
+            P(),  # queries replicated
+            P(),  # query hash strings replicated
+        ),
+        out_specs=out_specs,
+        check_rep=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Full pipeline: candidates -> per-shard verify -> global merge
+# ---------------------------------------------------------------------------
+
+
+def _local_search(family, store, h, csa, gid, tail, queries, qh,
+                  *, params, metric, axis):
+    view, gid_l = _local_view(family, store, h, csa, gid, tail, metric)
+    ids_l, _ = get_source(_inner_name(params))(view, queries, qh, params)
+    g = _to_global(ids_l, gid_l)
+    ids_l = jnp.where(g >= 0, ids_l, -1)  # mask padded rows before gathers
+    use_kernel = verify_mod.resolve_use_kernel(params.use_gather_kernel)
+    B = queries.shape[0]
+
+    if view.store.exact:
+        # single-stage: exact local distances, local top-k, merged top-k
+        dist = view.store.gather_dist(
+            ids_l, queries, metric=metric, use_kernel=use_kernel
+        )
+        kk = min(params.k, ids_l.shape[1])
+        neg, sel = jax.lax.top_k(-dist, kk)
+        ids_k = jnp.take_along_axis(g, sel, axis=1)
+        all_ids = jax.lax.all_gather(ids_k, axis, axis=1).reshape(B, -1)
+        all_d = jax.lax.all_gather(-neg, axis, axis=1).reshape(B, -1)
+        return verify_mod._topk_ids(all_d, all_ids, params.k)
+
+    # two-stage: per-shard stage-1 scan, merged exact rerank
+    surv_l, approx = verify_mod.survivors(view.store, queries, ids_l,
+                                          params, metric)
+    g_surv = _to_global(surv_l, gid_l)
+    safe = jnp.maximum(surv_l, 0)
+    rows_f = (view.tail[safe] if view.tail is not None
+              else view.store.gather(surv_l))  # (B, R, d) fp32
+    all_ids = jax.lax.all_gather(g_surv, axis, axis=1).reshape(B, -1)
+    all_a = jax.lax.all_gather(approx, axis, axis=1).reshape(B, -1)
+    all_rows = jax.lax.all_gather(rows_f, axis, axis=1).reshape(
+        B, -1, rows_f.shape[-1]
+    )
+    # cut the merged pool back to the monolithic stage-1 survivor set: the
+    # global top-R by approximate distance (each shard's local top-R is a
+    # superset of its members of the global top-R, so nothing is lost)
+    r = min(max(params.k * params.rerank_mult, params.k),
+            params.lam, all_a.shape[1])
+    _, sel = jax.lax.top_k(-all_a, r)
+    ids_sel = jnp.take_along_axis(all_ids, sel, axis=1)
+    rows_sel = jnp.take_along_axis(all_rows, sel[..., None], axis=1)
+    return verify_mod.rerank_rows(rows_sel, queries, ids_sel, params.k, metric)
+
+
+def search(index: ShardedLCCSIndex, queries: jax.Array, params: SearchParams):
+    """Full sharded c-k-ANNS: hash -> per-shard source -> per-shard verify ->
+    all_gather + exact global top-k.  Pure function of the index pytree;
+    `params` must be static under jit (see `jit_sharded_search`)."""
+    if not isinstance(index, ShardedLCCSIndex):
+        raise TypeError(
+            "repro.shard.search needs a ShardedLCCSIndex; monolithic indexes "
+            "use repro.core.index.search"
+        )
+    queries = jnp.asarray(queries, jnp.float32)
+    qh = index.family.hash(queries)
+    metric = params.metric or index.metric
+    fn = _shard_call(
+        index,
+        partial(_local_search, params=params, metric=metric, axis=index.axis),
+        out_specs=(P(), P()),
+    )
+    return fn(index.family, index.store, index.h, index.csa, index.gid,
+              index.tail, queries, qh)
+
+
+jit_sharded_search = jax.jit(search, static_argnames="params")
+
+
+# ---------------------------------------------------------------------------
+# The "sharded" candidate source (registry integration)
+# ---------------------------------------------------------------------------
+
+
+@register_source("sharded")
+def sharded_source(index, queries, qh, params):
+    """Candidate generation over all shards: run `params.inner` per shard,
+    map local ids to global via the per-shard gid arrays, and merge the
+    per-shard top-lambda sets by LCP (exact -- shards hold disjoint rows).
+    Returns (ids (B, lam), lcps (B, lam)) with global ids, like any source."""
+    if not isinstance(index, ShardedLCCSIndex):
+        raise TypeError(
+            "source='sharded' needs a ShardedLCCSIndex; monolithic LCCSIndex "
+            "callers should pick 'lccs'/'bruteforce'/'multiprobe-*'"
+        )
+
+    def local(family, store, h, csa, gid, tail, queries_l, qh_l):
+        view, gid_l = _local_view(family, store, h, csa, gid, tail,
+                                  params.metric or index.metric)
+        ids_l, lcps = get_source(params.inner)(view, queries_l, qh_l, params)
+        g = _to_global(ids_l, gid_l)
+        lcps = jnp.where(g >= 0, lcps, -1)
+        B = queries_l.shape[0]
+        all_g = jax.lax.all_gather(g, index.axis, axis=1).reshape(B, -1)
+        all_l = jax.lax.all_gather(lcps, index.axis, axis=1).reshape(B, -1)
+        return jax.vmap(lambda i, l: dedupe_topk(i, l, params.lam))(all_g, all_l)
+
+    fn = _shard_call(index, local, out_specs=(P(), P()))
+    return fn(index.family, index.store, index.h, index.csa, index.gid,
+              index.tail, queries, qh)

@@ -1,34 +1,14 @@
 """Multi-device semantics tests.  Each test spawns a subprocess with
-XLA_FLAGS=--xla_force_host_platform_device_count=N so the main test process
-keeps seeing exactly 1 device (launch contract)."""
-import json
-import subprocess
-
+XLA_FLAGS=--xla_force_host_platform_device_count=N (shared recipe in
+conftest.run_multidevice) so the main test process keeps the invoking
+environment's device view (launch contract)."""
 import pytest
-import sys
-import textwrap
-from pathlib import Path
 
-SRC = str(Path(__file__).resolve().parent.parent / "src")
+from conftest import run_multidevice
 
 
 def _run(script: str, n_dev: int = 8) -> str:
-    code = textwrap.dedent(script)
-    proc = subprocess.run(
-        [sys.executable, "-c", code],
-        capture_output=True,
-        text=True,
-        timeout=600,
-        env={
-            "XLA_FLAGS": f"--xla_force_host_platform_device_count={n_dev}",
-            "PYTHONPATH": SRC,
-            "PATH": "/usr/bin:/bin",
-            "JAX_PLATFORMS": "cpu",
-            "HOME": "/tmp",
-        },
-    )
-    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
-    return proc.stdout
+    return run_multidevice(script, n_dev)
 
 
 @pytest.mark.slow

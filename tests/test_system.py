@@ -1,5 +1,7 @@
 """End-to-end system behaviour: train -> embed -> index -> serve, with
 fault tolerance in the loop."""
+import time
+
 import numpy as np
 import jax
 import pytest
@@ -53,6 +55,99 @@ def test_serve_stream_microbatching():
     assert engine.stats.batches == 3  # 8 + 8 + 4
     hits = sum(int(i in results[i][0]) for i in range(20))
     assert hits >= 18
+
+
+def test_serve_batch_stats_split_embed_vs_search():
+    """embed_s and search_s must each measure their own stage: the embedding
+    is blocked before the search timestamp (async dispatch would otherwise
+    credit embed work to search_s), both are positive, and together they
+    bound the measured wall time of the call."""
+    cfg = ARCHS["gemma-2b"].smoke()
+    params = api.init_model(jax.random.key(0), cfg)
+    engine = RetrievalEngine(cfg, params, m=16, metric="angular", max_batch=8)
+    corpus, _ = lm_token_batches(vocab=cfg.vocab, seed=4)(0, 64, 16)
+    engine.build_index(corpus)
+    p = SearchParams(k=3, lam=16)
+    engine.serve_batch(corpus[:8], p)  # warm both jit caches
+    before_e, before_s = engine.stats.embed_s, engine.stats.search_s
+    t0 = time.perf_counter()
+    engine.serve_batch(corpus[:8], p)
+    wall = time.perf_counter() - t0
+    de = engine.stats.embed_s - before_e
+    ds = engine.stats.search_s - before_s
+    assert de > 0.0 and ds > 0.0, (de, ds)
+    assert de + ds <= wall * 1.05, (de, ds, wall)
+    assert engine.stats.batches == 2 and engine.stats.requests == 16
+
+
+def test_serve_stream_ragged_query_lengths():
+    """Mixed token lengths in one stream must not crash the micro-batcher
+    (np.stack on a ragged list) nor pad queries with alien tokens: the
+    queue flushes on a length change, so every batch is rectangular."""
+    cfg = ARCHS["gemma-2b"].smoke()
+    params = api.init_model(jax.random.key(0), cfg)
+    engine = RetrievalEngine(cfg, params, m=16, metric="angular", max_batch=8)
+    corpus, _ = lm_token_batches(vocab=cfg.vocab, seed=5)(0, 64, 16)
+    engine.build_index(corpus)
+    p = SearchParams(k=3, lam=48)
+    long_q = np.concatenate([corpus[7], corpus[7]])  # length 32 vs 16
+    stream = [corpus[0], corpus[1], long_q, corpus[2], corpus[3], long_q]
+    results = engine.serve_stream(stream, p)
+    assert len(results) == len(stream)
+    # same-length runs were batched, length changes flushed: 4 micro-batches
+    assert engine.stats.batches == 4
+    assert engine.stats.requests == len(stream)
+    # the normal-length queries still retrieve their own documents
+    hits = sum(int(doc in results[j][0])
+               for j, doc in [(0, 0), (1, 1), (3, 2), (4, 3)])
+    assert hits >= 3, hits
+
+
+def test_serve_sharded_matches_monolithic():
+    """shards=2: the engine partitions the index over two (fake) devices and
+    serve_batch answers identically to the monolithic engine."""
+    from conftest import run_multidevice
+
+    out = run_multidevice(
+        """
+        import numpy as np, jax
+        from repro.configs import ARCHS
+        from repro.core import SearchParams
+        from repro.data import lm_token_batches
+        from repro.models import api
+        from repro.serve import RetrievalEngine
+        from repro.shard import ShardedLCCSIndex
+
+        cfg = ARCHS["gemma-2b"].smoke()
+        params = api.init_model(jax.random.key(0), cfg)
+        corpus, _ = lm_token_batches(vocab=cfg.vocab, seed=6)(0, 48, 16)
+        p = SearchParams(k=3, lam=64, use_gather_kernel=False)
+
+        mono = RetrievalEngine(cfg, params, m=16, metric="angular")
+        mono.build_index(corpus)
+        ids_m, d_m = mono.serve_batch(corpus[:8], p)
+
+        eng = RetrievalEngine(cfg, params, m=16, metric="angular", shards=2)
+        eng.build_index(corpus)
+        assert isinstance(eng.index, ShardedLCCSIndex)
+        assert eng.index.shards == 2
+        ids_s, d_s = eng.serve_batch(corpus[:8], p.replace(shards=2))
+        np.testing.assert_allclose(np.sort(d_s, axis=1), np.sort(d_m, axis=1),
+                                   rtol=1e-5)
+        for a, b in zip(ids_s, ids_m):
+            assert set(a.tolist()) == set(b.tolist())
+        # dynamic + sharded is refused
+        try:
+            eng.build_index(corpus, dynamic=True)
+        except ValueError as e:
+            assert "mutually exclusive" in str(e)
+        else:
+            raise AssertionError("dynamic+sharded should raise")
+        print("ENGINE-SHARDED-OK")
+        """,
+        n_dev=2,
+    )
+    assert "ENGINE-SHARDED-OK" in out
 
 
 def test_serve_stream_interleaves_corpus_updates():
