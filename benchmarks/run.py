@@ -22,7 +22,12 @@ from .common import CsvRows
 def _write_bench_json(payload: dict, path: str | Path = "BENCH_search.json"):
     import os
 
+    from repro.exec import plan_cache
+
     payload = dict(payload, wall_s=round(payload.get("wall_s", 0.0), 1))
+    # staged-pipeline compile count for the whole bench run (repro.exec):
+    # a jump in misses between PRs means a code path started retracing
+    payload["plan_cache"] = plan_cache().stats()
     # absolute QPS on small shared-CPU runners swings +-50% run to run;
     # record the environment so PR-over-PR comparisons weigh deltas sanely
     payload["env"] = {

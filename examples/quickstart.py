@@ -28,6 +28,12 @@ Three ideas to take away:
      On CPU, fake devices come from
      XLA_FLAGS=--xla_force_host_platform_device_count=N (set before jax
      starts -- see examples/distributed_index.py, which re-execs itself).
+  7. Every search route -- monolithic, segmented, sharded, disk-tail --
+     runs through ONE staged execution layer (`repro.exec`, DESIGN.md §2):
+     `index.search`/`jit_search` fetch a compiled plan from an explicit
+     cache keyed on (params, index structure, query shape), and
+     `repro.exec.plan_cache().stats()` counts compiles vs reuses, so a
+     serving loop can prove it never silently retraces.
 
 The old kwargs API (`index.query(Q, k=10, lam=200, probes=17)`) still works
 but is deprecated; it forwards to `search` via `SearchParams.from_legacy`.
@@ -54,6 +60,13 @@ from repro.data.synthetic import clustered_vectors, queries_from
 
 def main():
     n, d, k = 20_000, 128, 10
+    # lam=200 with the default width cap (64) trades the W >= lambda
+    # dominance guarantee for probe bandwidth -- a deliberate choice here,
+    # so show the WindowWidthWarning once instead of per construction
+    import warnings
+
+    from repro.core import WindowWidthWarning
+    warnings.filterwarnings("once", category=WindowWidthWarning)
     print(f"dataset: n={n} d={d} (synthetic sift-like)")
     X = clustered_vectors(n, d, n_clusters=64, seed=0)
     Q = queries_from(X, 30, jitter=0.3)

@@ -1,0 +1,15 @@
+"""Deprecation vocabulary for the repro package.
+
+Every deprecated shim in this package (legacy kwargs query APIs, the old
+`core.distributed` sketch, ...) warns with `ReproDeprecationWarning`, a
+`DeprecationWarning` subclass.  The subclass exists so CI can escalate *our*
+deprecations to errors -- ``filterwarnings = error::repro.compat.
+ReproDeprecationWarning`` in pyproject.toml -- without also erroring on
+deprecation chatter from jax/numpy version skew.  Shim regression tests opt
+out simply by asserting the warning with ``pytest.warns(DeprecationWarning)``.
+"""
+from __future__ import annotations
+
+
+class ReproDeprecationWarning(DeprecationWarning):
+    """A deprecated repro API was called; the message names the replacement."""

@@ -6,7 +6,7 @@ hash -> candidates -> verify path compiles as one `jax.jit` computation via
 `jit_search`.
 """
 from .csa import CSA, build_csa, build_csa_oracle, lccs_length_oracle
-from .params import SearchParams
+from .params import SearchParams, WindowWidthWarning
 from .sources import (
     CandidateSource,
     available_sources,
@@ -48,6 +48,7 @@ __all__ = [
     "Segment",
     "SegmentedLCCSIndex",
     "SearchParams",
+    "WindowWidthWarning",
     "CandidateSource",
     "available_sources",
     "get_source",

@@ -61,11 +61,13 @@ def distributed_query(
     Note: every call rebuilds the sharded index (host copy of data/h, padding,
     device placement) -- fine for one-off queries, wasteful in a loop.  Batch
     callers should build a `ShardedLCCSIndex` once and reuse it."""
+    from repro.compat import ReproDeprecationWarning
+
     warnings.warn(
         "repro.core.distributed.distributed_query is deprecated; build a "
         "repro.shard.ShardedLCCSIndex and call index.search(queries, "
         "SearchParams(...)) instead",
-        DeprecationWarning,
+        ReproDeprecationWarning,
         stacklevel=2,
     )
     from repro.shard import shard_index

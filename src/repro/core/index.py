@@ -52,6 +52,14 @@ quantized store, exact fp32 rerank of the best ``k * rerank_mult`` survivors
 against the tail (in-memory by default; pass ``tail_path=`` to keep it on
 disk and drop resident fp32 entirely).  ``store="bf16"`` halves memory with
 near-fp32 accuracy; ``store="fp32"`` is the seed layout and single-stage.
+
+Execution: every search route here is a thin wrapper over the unified
+query-execution layer (`repro.exec`, DESIGN.md §2) -- one staged
+hash -> probe -> gather -> verify -> merge plan per (SearchParams, index
+structure, query shape), compiled once and cached explicitly
+(`repro.exec.plan_cache`).  The pure function `search` below remains the
+traced monolithic/segmented pipeline body for callers composing their own
+transforms; `jit_search` and the `search` methods go through the plan cache.
 """
 from __future__ import annotations
 
@@ -66,15 +74,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import ReproDeprecationWarning
 from repro.store import make_store
 from repro.store import stores as store_mod
 from repro.store import tail as tail_mod
+from repro.exec import execute as _execute, stages as exec_stages
 
 from . import lsh as lsh_mod
-from . import verify as verify_mod
 from .csa import CSA, build_csa
 from .params import SearchParams
-from .sources import get_source
 
 
 @partial(jax.jit, static_argnames=("k", "metric"))
@@ -85,20 +93,12 @@ def verify_candidates(
     k: int,
     metric: str,
 ):
-    """Compute true distances for candidates and return the nearest k.
-    Returns (ids (B, k), dists (B, k)); missing slots are id=-1, dist=inf."""
-    safe = jnp.maximum(cand_ids, 0)
-    cand = data[safe]  # (B, lam, d)
-    dist = lsh_mod.distance(cand, queries[:, None, :], metric)
-    dist = jnp.where(cand_ids >= 0, dist, jnp.inf)
-    kk = min(k, cand_ids.shape[1])
-    neg, idx = jax.lax.top_k(-dist, kk)
-    ids = jnp.take_along_axis(cand_ids, idx, axis=1)
-    out_d = -neg
-    if kk < k:
-        ids = jnp.pad(ids, ((0, 0), (0, k - kk)), constant_values=-1)
-        out_d = jnp.pad(out_d, ((0, 0), (0, k - kk)), constant_values=jnp.inf)
-    return ids, out_d
+    """Compute true distances for candidates and return the nearest k
+    (seed-era entry point; the gather + rerank stages live in
+    `repro.exec.stages`).  Returns (ids (B, k), dists (B, k)); missing slots
+    are id=-1, dist=inf."""
+    rows = data[jnp.maximum(cand_ids, 0)]  # (B, lam, d)
+    return exec_stages.rerank_rows(rows, queries, cand_ids, k, metric)
 
 
 @dataclass
@@ -121,6 +121,9 @@ class LCCSIndex:
     metric: str
     tail: jax.Array | None = None  # (n, d) fp32 rerank rows (inexact stores)
     tail_path: str | None = field(default=None)  # disk-lazy rerank target
+
+    # topology marker consumed by the repro.exec plan dispatch
+    topology = "monolithic"
 
     # -- construction -------------------------------------------------------
 
@@ -197,26 +200,14 @@ class LCCSIndex:
 
     def search(self, queries, params: SearchParams | None = None):
         """c-k-ANNS: candidate generation + true-distance verification,
-        jit-compiled end to end.  Returns (ids (B, k), dists (B, k)).
+        jit-compiled end to end via the plan cache (`repro.exec`).  Returns
+        (ids (B, k), dists (B, k)).
 
-        With a disk-lazy tail (built with `tail_path=`) the pipeline splits:
-        jitted stage 1 (hash -> candidates -> approximate scan -> survivors),
-        host memmap gather of the survivors' fp32 rows, jitted exact rerank.
-        """
-        queries = jnp.asarray(queries, dtype=jnp.float32)
-        p = params or SearchParams()
-        # pin the tri-state kernel toggle to a concrete bool so the resolved
-        # value participates in the jit cache key (a later env-var change
-        # cannot be seen by an already-compiled executable)
-        if p.use_gather_kernel is None:
-            p = p.replace(
-                use_gather_kernel=verify_mod.resolve_use_kernel(None))
-        if not self.store.exact and self.tail is None and self.tail_path:
-            surv = _jit_survivors(self, queries, p)
-            rows = jnp.asarray(tail_mod.gather_tail(self.tail_path, surv))
-            return verify_mod.rerank_rows(rows, queries, surv, p.k,
-                                          p.metric or self.metric)
-        return jit_search(self, queries, p)
+        With a disk-lazy tail (built with `tail_path=`) the compiled plan
+        splits: jitted stage 1 (hash -> candidates -> approximate scan ->
+        survivors), host memmap gather of the survivors' fp32 rows, jitted
+        exact rerank."""
+        return _execute(self, queries, params)
 
     # -- multi-device partitioning ------------------------------------------
 
@@ -237,7 +228,7 @@ class LCCSIndex:
         warnings.warn(
             "LCCSIndex.query(k=, lam=, ...) is deprecated; use "
             "LCCSIndex.search(queries, SearchParams(...))",
-            DeprecationWarning,
+            ReproDeprecationWarning,
             stacklevel=2,
         )
         return self.search(queries, SearchParams.from_legacy(k=k, lam=lam, **kw))
@@ -248,7 +239,7 @@ class LCCSIndex:
         warnings.warn(
             "LCCSIndex.candidates(lam, ...) is deprecated; use "
             "repro.core.index.candidates(index, queries, SearchParams(...))",
-            DeprecationWarning,
+            ReproDeprecationWarning,
             stacklevel=2,
         )
         params = SearchParams.from_legacy(lam=lam, **kw)
@@ -346,8 +337,8 @@ jax.tree_util.register_dataclass(
 
 
 def candidates(index: LCCSIndex, queries: jax.Array, params: SearchParams):
-    """Candidate generation only: dispatch to the registered source.
-    Returns (ids, lcps): (B, lam) each, -1 padded."""
+    """Candidate generation only: the hash + probe stages (dispatch to the
+    registered source).  Returns (ids, lcps): (B, lam) each, -1 padded."""
     if getattr(index, "sharded", False) and params.source != "sharded":
         raise TypeError(
             f"a ShardedLCCSIndex holds per-shard CSAs; source="
@@ -355,18 +346,24 @@ def candidates(index: LCCSIndex, queries: jax.Array, params: SearchParams):
             f"SearchParams(source='sharded', inner={params.source!r})"
         )
     queries = jnp.asarray(queries, dtype=jnp.float32)
-    qh = index.family.hash(queries)
-    return get_source(params.source)(index, queries, qh, params)
+    qh = exec_stages.hash_queries(index.family, queries)
+    return exec_stages.probe(index, queries, qh, params)
 
 
 def search(index: LCCSIndex, queries: jax.Array, params: SearchParams):
-    """Full c-k-ANNS pipeline: hash -> candidate source -> verification.
-    Pure function of a pytree index; `params` must be static under jit.
+    """Full c-k-ANNS pipeline: hash -> probe -> gather -> verify, the staged
+    body from `repro.exec.topology.search_pipeline`.  Pure function of a
+    pytree index; `params` must be static under jit -- compose it with your
+    own `jax.jit`/`vmap`/sharding, or call `jit_search` for the plan-cached
+    route.
 
     Verification runs against the index's vector store: single-stage for
-    exact stores, approximate-scan + fp32 rerank for quantized ones (see
-    `repro.core.verify`).  A disk-lazy tail cannot be traced -- use
-    `index.search`, which orchestrates the split pipeline on the host."""
+    exact stores, approximate-scan + fp32 rerank for quantized ones (the
+    stages live in `repro.exec.stages`).  A disk-lazy tail cannot be traced
+    -- use `index.search` / `jit_search`, whose compiled plan orchestrates
+    the split pipeline on the host."""
+    from repro.exec.topology import search_pipeline
+
     if getattr(index, "sharded", False):
         raise TypeError(
             "a ShardedLCCSIndex verifies per shard before the global merge; "
@@ -376,28 +373,21 @@ def search(index: LCCSIndex, queries: jax.Array, params: SearchParams):
     if not index.store.exact and index.tail is None and index.tail_path:
         raise ValueError(
             "this index's fp32 rerank tail is disk-lazy (tail_path="
-            f"{index.tail_path!r}); jit_search cannot gather from disk -- "
-            "call index.search(queries, params) instead"
+            f"{index.tail_path!r}); a traced pipeline cannot gather from "
+            "disk -- call index.search(queries, params) (or jit_search, "
+            "whose plan splits the pipeline) instead"
         )
     queries = jnp.asarray(queries, dtype=jnp.float32)
-    ids, _ = candidates(index, queries, params)
-    return verify_mod.verify_store(
-        index.store, index.tail, queries, ids, params,
-        params.metric or index.metric,
-    )
+    return search_pipeline(index, queries, params)
 
 
-def _survivors(index, queries: jax.Array, params: SearchParams):
-    """Stage 1 only (disk-lazy orchestration): candidate generation plus the
-    approximate scan's top k * rerank_mult survivor ids."""
-    queries = jnp.asarray(queries, dtype=jnp.float32)
-    ids, _ = candidates(index, queries, params)
-    surv, _ = verify_mod.survivors(
-        index.store, queries, ids, params, params.metric or index.metric
-    )
-    return surv
+def jit_search(index, queries, params: SearchParams):
+    """Compiled search -- a thin wrapper over the unified execution layer
+    (`repro.exec.compile_plan`): resolves `params` for the index's topology
+    (monolithic, segmented, or sharded -- all are accepted), fetches or
+    builds the staged plan, and runs it.  Compiles once per (params, index
+    structure, query shape); `repro.exec.plan_cache().stats()` audits it."""
+    return _execute(index, queries, params)
 
 
-jit_search = jax.jit(search, static_argnames="params")
 jit_candidates = jax.jit(candidates, static_argnames="params")
-_jit_survivors = jax.jit(_survivors, static_argnames="params")

@@ -19,6 +19,14 @@ source       candidate-source name from the registry (`repro.core.sources`):
 mode         inner k-LCCS search mode: "parallel" (vmapped binary searches)
              or "narrowed" (paper-faithful Corollary 3.2 scan).
 width        window half-width of the k-LCCS search; None = max(4, min(lam, 64)).
+             The W >= lambda window-dominance guarantee (DESIGN.md §3: the
+             returned LCCS lengths elementwise dominate exact Algorithm 2)
+             only holds when the resolved width >= lam, so the default cap of
+             64 silently weakens it for lam > 64: candidates beyond the
+             64-wide window of some shift can be missed, trading recall for
+             probe bandwidth.  Constructing such params emits a
+             `WindowWidthWarning`; pass width=lam to keep the guarantee, or
+             an explicit smaller width to accept the trade deliberately.
 probes       number of MP-LCCS-LSH probes (Algorithm 3); only the multiprobe-*
              sources look at it.
 metric       distance metric for verification; None = the index's own metric.
@@ -58,7 +66,57 @@ use_gather_kernel
 from __future__ import annotations
 
 import dataclasses
+import sys
+import threading
+import warnings
+from contextlib import contextmanager
 from dataclasses import dataclass
+
+_WARN_STATE = threading.local()
+
+
+def _user_stacklevel() -> int:
+    """Stacklevel (relative to __post_init__) of the nearest frame that is
+    user code: skips the dataclass-generated __init__ ("<string>" frames
+    named __init__), dataclasses.replace, and this module (from_legacy,
+    chained construction helpers), so the warning points at the line that
+    actually chose the params."""
+    internal = (__file__, dataclasses.__file__)
+    level = 2  # __post_init__'s caller
+    try:
+        f = sys._getframe(3)  # 0 here, 1 __post_init__, 2 generated __init__
+    except ValueError:  # pragma: no cover -- shallow stack
+        return level
+    while f is not None:
+        fname = f.f_code.co_filename
+        if not (fname in internal
+                or (fname == "<string>" and f.f_code.co_name == "__init__")):
+            break
+        f = f.f_back
+        level += 1
+    return level
+
+
+@contextmanager
+def _suppress_width_warning():
+    """Internal-rewrite scope: the exec topology adapters derive new
+    SearchParams from user params (source rewrites, kernel pinning) on every
+    plan resolution; the user's own construction already warned, so derived
+    copies must not re-fire `WindowWidthWarning` from library frames."""
+    prev = getattr(_WARN_STATE, "off", 0)
+    _WARN_STATE.off = prev + 1
+    try:
+        yield
+    finally:
+        _WARN_STATE.off = prev
+
+
+class WindowWidthWarning(UserWarning):
+    """The resolved k-LCCS window width is smaller than lam, so the
+    W >= lambda window-dominance guarantee (DESIGN.md §3) is weakened:
+    recall can drop below the exact Algorithm-2 floor.  Emitted when the
+    *default* width cap (64) silently does this for lam > 64; silence it by
+    passing an explicit `width` (width=lam restores the guarantee)."""
 
 
 @dataclass(frozen=True)
@@ -107,6 +165,33 @@ class SearchParams:
             raise ValueError(
                 f"mode must be 'parallel' or 'narrowed', got {self.mode!r} "
                 "(bruteforce is a candidate *source* now: source='bruteforce')"
+            )
+        if self.width is not None and self.width < 1:
+            raise ValueError(f"width must be >= 1 or None, got {self.width}")
+        # the width<lam footgun: the default width cap (64) silently drops
+        # the W >= lambda window-dominance guarantee for lam > 64 -- warn so
+        # the recall implication is a documented choice, not an accident.
+        # (An *explicit* width < lam is taken as that deliberate choice, and
+        # "bruteforce" scores every row densely -- no window is involved;
+        # for the "segmented"/"sharded" wrappers the probing source is
+        # `inner`.  Params derived internally by the exec resolve never
+        # re-warn -- the user's original construction already did.)
+        probing = (self.inner if self.source in ("segmented", "sharded")
+                   else self.source)
+        if (self.width is None and self.resolved_width() < self.lam
+                and probing != "bruteforce"
+                and not getattr(_WARN_STATE, "off", 0)):
+            warnings.warn(
+                f"SearchParams(lam={self.lam}) resolves the k-LCCS window "
+                f"width to {self.resolved_width()} < lam: the W >= lambda "
+                "window-dominance guarantee (DESIGN.md §3) is weakened and "
+                "recall may fall below the exact Algorithm-2 floor; pass "
+                f"width={self.lam} to keep it, or an explicit smaller width "
+                "to accept the recall/probe-bandwidth trade",
+                WindowWidthWarning,
+                # attribute to the user's construction line, whichever path
+                # built us (direct call, .replace(), from_legacy)
+                stacklevel=_user_stacklevel() + 1,
             )
 
     # -- derived -------------------------------------------------------------

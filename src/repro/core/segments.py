@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.exec import execute as _execute, stages as exec_stages
 from repro.store import make_store
 
 from . import lsh as lsh_mod
@@ -59,7 +60,6 @@ from .bruteforce import circ_run_lengths
 from .csa import CSA, build_csa
 from .index import LCCSIndex
 from .params import SearchParams
-from .search import dedupe_topk
 from .sources import get_source, register_source
 
 _PAD_HASH = np.iinfo(np.int32).max  # sentinel hash value for padded rows
@@ -136,8 +136,10 @@ class SegmentedLCCSIndex:
     tail: jax.Array | None = None
 
     # a disk-lazy tail is a static-index feature; the attribute exists so the
-    # shared `core.index.search` verify path treats both index classes alike
+    # shared verify stage treats both index classes alike
     tail_path = None
+    # topology marker consumed by the repro.exec plan dispatch
+    topology = "segmented"
 
     # -- construction -------------------------------------------------------
 
@@ -400,18 +402,12 @@ class SegmentedLCCSIndex:
     # -- search -------------------------------------------------------------
 
     def search(self, queries, params: SearchParams | None = None):
-        """c-k-ANNS over the live corpus, jitted end to end.  `params.source`
-        picks the per-segment candidate source; it is rewritten onto the
-        "segmented" registry entry (source="segmented", inner=<source>)."""
-        from .index import jit_search
-        from .verify import resolve_use_kernel
-
-        p = params or SearchParams()
-        if p.source != "segmented":
-            p = p.replace(source="segmented", inner=p.source)
-        if p.use_gather_kernel is None:  # concrete bool -> jit cache key
-            p = p.replace(use_gather_kernel=resolve_use_kernel(None))
-        return jit_search(self, jnp.asarray(queries, jnp.float32), p)
+        """c-k-ANNS over the live corpus, jitted end to end via the plan
+        cache (`repro.exec`).  `params.source` picks the per-segment
+        candidate source; the segmented topology adapter rewrites it onto
+        the "segmented" registry entry (source="segmented", inner=<source>)
+        and pins the kernel toggle."""
+        return _execute(self, queries, params)
 
 
 jax.tree_util.register_dataclass(
@@ -427,15 +423,6 @@ jax.tree_util.register_dataclass(
 # ---------------------------------------------------------------------------
 
 
-def _pad_topk(ids: jax.Array, vals: jax.Array, lam: int):
-    """(B, j) -> (B, lam), -1 padded, for j <= lam."""
-    j = ids.shape[1]
-    if j < lam:
-        ids = jnp.pad(ids, ((0, 0), (0, lam - j)), constant_values=-1)
-        vals = jnp.pad(vals, ((0, 0), (0, lam - j)), constant_values=-1)
-    return ids, vals
-
-
 def _buffer_topk(index: SegmentedLCCSIndex, qh: jax.Array, lam: int):
     """Exact LCCS scoring of the delta buffer; dead/free slots masked."""
     ok = (index.buf_gid >= 0) & index.alive[jnp.maximum(index.buf_gid, 0)]
@@ -448,14 +435,15 @@ def _buffer_topk(index: SegmentedLCCSIndex, qh: jax.Array, lam: int):
         return ids, jnp.where(vals >= 0, vals, -1)
 
     ids, vals = jax.vmap(one)(qh)
-    return _pad_topk(ids, vals, lam)
+    return exec_stages.pad_candidates(ids, vals, lam)
 
 
 @register_source("segmented")
 def segmented_source(index, queries, qh, params):
-    """Per-segment `params.inner` search + delta-buffer scorer: local ids are
-    mapped to global ids, tombstones are masked, and the per-part top-lambda
-    sets merge exactly with `dedupe_topk` (LCCS scoring is pointwise)."""
+    """Per-segment `params.inner` search + delta-buffer scorer: the shared
+    exec stages map local ids to global ids (`local_to_global`), mask
+    tombstones (`mask_dead`), and merge the per-part top-lambda sets exactly
+    (`merge_candidates` -- LCCS scoring is pointwise)."""
     if not isinstance(index, SegmentedLCCSIndex):
         raise TypeError(
             "source='segmented' needs a SegmentedLCCSIndex; monolithic "
@@ -469,17 +457,13 @@ def segmented_source(index, queries, qh, params):
             metric=index.metric, tail=index.tail,
         )
         local_ids, lcps = inner(view, queries, qh, params)
-        g = jnp.where(
-            local_ids >= 0,
-            seg.gid[jnp.clip(local_ids, 0, seg.cap - 1)],
-            -1,
-        )
-        live = (g >= 0) & index.alive[jnp.maximum(g, 0)]
-        parts_ids.append(jnp.where(live, g, -1))
-        parts_lcps.append(jnp.where(live, lcps, -1))
+        g = exec_stages.local_to_global(local_ids, seg.gid)
+        g, lcps = exec_stages.mask_dead(g, lcps, index.alive)
+        parts_ids.append(g)
+        parts_lcps.append(lcps)
     b_ids, b_lcps = _buffer_topk(index, qh, params.lam)
     parts_ids.append(b_ids)
     parts_lcps.append(b_lcps)
     all_ids = jnp.concatenate(parts_ids, axis=1)
     all_lcps = jnp.concatenate(parts_lcps, axis=1)
-    return jax.vmap(lambda i, l: dedupe_topk(i, l, params.lam))(all_ids, all_lcps)
+    return exec_stages.merge_candidates(all_ids, all_lcps, params.lam)

@@ -1,121 +1,32 @@
-"""Two-stage candidate verification over a pluggable vector store.
+"""Candidate verification -- now a thin façade over `repro.exec.stages`.
 
-The paper's query phase verifies candidates with a linear scan over raw fp32
-vectors (Algorithm 2's last step).  With a quantized `VectorStore` the scan
-splits in two:
-
-  stage 1  approximate distances from the store's own representation
-           (fused gather+dequant+distance Pallas kernel, or the jnp ref),
-           keeping the best ``k * rerank_mult`` survivors;
-  stage 2  exact fp32 rerank of the survivors against the *tail* -- the
-           original rows, held in memory (pytree leaf, stays inside one jit)
-           or on disk (`LCCSIndex.tail_path`, gathered lazily by the host
-           orchestration in `LCCSIndex.search`).
-
-Exact stores (fp32) collapse to the single-stage path, which is bit-identical
-to the seed `verify_candidates` on the reference route and shares one kernel
-dispatch point with the quantized route when `use_gather_kernel` is on.
-
-`SearchParams` knobs: `store` (expected store kind, validated), `rerank_mult`
-(over-fetch factor; only inexact stores consult it) and `use_gather_kernel`
-(tri-state: None = REPRO_GATHER_KERNEL env, else on for TPU backends only --
-interpret-mode Pallas on CPU is correct but slow, so it is opt-in there).
+The two-stage verify path (approximate scan over the quantized store ->
+exact fp32 rerank of the best ``k * rerank_mult`` survivors) used to live
+here and be re-implemented by the sharded and disk-tail pipelines; the
+stage functions now have exactly one home in `repro.exec.stages` (see
+DESIGN.md §2) and this module re-exports the long-standing names so existing
+imports (`repro.core.verify_store`, `repro.core.rerank_rows`, the
+`REPRO_GATHER_KERNEL` toggle) keep working unchanged.
 """
 from __future__ import annotations
 
-import os
-from functools import partial
+from repro.exec.stages import (
+    ENV_GATHER_KERNEL,
+    rerank_rows,
+    resolve_use_kernel,
+    survivors,
+    topk_ids,
+    verify as verify_store,
+)
 
-import jax
-import jax.numpy as jnp
+# legacy private alias (pre-exec callers referenced the underscored name)
+_topk_ids = topk_ids
 
-from . import lsh as lsh_mod
-
-ENV_GATHER_KERNEL = "REPRO_GATHER_KERNEL"
-
-
-def resolve_use_kernel(flag: bool | None) -> bool:
-    """Tri-state resolution of `SearchParams.use_gather_kernel`.
-
-    The index `search` methods resolve None to a concrete bool *before*
-    jitting, so the choice is part of the jit cache key.  Direct
-    `jit_search` callers passing None get trace-time resolution instead:
-    correct on first compile, but a later env-var flip will not invalidate
-    an already-cached executable -- pass an explicit bool for that."""
-    if flag is not None:
-        return bool(flag)
-    env = os.environ.get(ENV_GATHER_KERNEL)
-    if env is not None:
-        return env.strip().lower() not in ("", "0", "false", "off")
-    return jax.default_backend() == "tpu"
-
-
-def _topk_ids(dist: jax.Array, ids: jax.Array, k: int):
-    """Nearest-k (ids, dists) with -1/inf padding, matching the seed
-    `verify_candidates` output contract."""
-    kk = min(k, ids.shape[1])
-    neg, idx = jax.lax.top_k(-dist, kk)
-    out_ids = jnp.take_along_axis(ids, idx, axis=1)
-    out_d = -neg
-    out_ids = jnp.where(jnp.isfinite(out_d), out_ids, -1)
-    if kk < k:
-        out_ids = jnp.pad(out_ids, ((0, 0), (0, k - kk)), constant_values=-1)
-        out_d = jnp.pad(out_d, ((0, 0), (0, k - kk)), constant_values=jnp.inf)
-    return out_ids, out_d
-
-
-@partial(jax.jit, static_argnames=("k", "metric"))
-def rerank_rows(
-    rows: jax.Array,  # (B, R, d) float32 candidate rows (pre-gathered)
-    queries: jax.Array,  # (B, d)
-    cand_ids: jax.Array,  # (B, R) int32, -1 padded
-    k: int,
-    metric: str,
-):
-    """Exact distance + top-k over already-gathered rows (stage 2).  Shared by
-    the in-jit path (tail rows indexed inside the trace) and the disk path
-    (rows memmap-gathered on host)."""
-    dist = lsh_mod.distance(rows, queries[:, None, :], metric)
-    dist = jnp.where(cand_ids >= 0, dist, jnp.inf)
-    return _topk_ids(dist, cand_ids, k)
-
-
-def _check_store_kind(store, params) -> None:
-    if params.store is not None and params.store != store.kind:
-        raise ValueError(
-            f"SearchParams(store={params.store!r}) does not match the index's "
-            f"store {store.kind!r}; rebuild the index or drop the param"
-        )
-
-
-def survivors(store, queries, cand_ids, params, metric: str):
-    """Stage 1: approximate scan + over-fetch.  Returns (ids (B, R), approx
-    dists (B, R)) with R = min(k * rerank_mult, lam)."""
-    _check_store_kind(store, params)
-    use_kernel = resolve_use_kernel(params.use_gather_kernel)
-    dist = store.gather_dist(cand_ids, queries, metric=metric,
-                             use_kernel=use_kernel)
-    r = min(max(params.k * params.rerank_mult, params.k), cand_ids.shape[1])
-    neg, idx = jax.lax.top_k(-dist, r)
-    return jnp.take_along_axis(cand_ids, idx, axis=1), -neg
-
-
-def verify_store(store, tail, queries, cand_ids, params, metric: str):
-    """Full verification against `store` (+ in-memory fp32 `tail` when the
-    store is inexact).  Pure JAX -- traces into `jit_search`.
-
-    tail=None on an inexact store means rerank against the store's own
-    dequantized rows: ranking equals stage 1, but callers still get distances
-    in the dequantized geometry (used when the fp32 tail is disk-resident and
-    the caller orchestrates the exact rerank itself, and by approx-only
-    setups that accept quantized distances)."""
-    _check_store_kind(store, params)
-    use_kernel = resolve_use_kernel(params.use_gather_kernel)
-    if store.exact:
-        dist = store.gather_dist(cand_ids, queries, metric=metric,
-                                 use_kernel=use_kernel)
-        return _topk_ids(dist, cand_ids, params.k)
-    surv_ids, _ = survivors(store, queries, cand_ids, params, metric)
-    safe = jnp.maximum(surv_ids, 0)
-    rows = tail[safe] if tail is not None else store.gather(surv_ids)
-    return rerank_rows(rows, queries, surv_ids, params.k, metric)
+__all__ = [
+    "ENV_GATHER_KERNEL",
+    "rerank_rows",
+    "resolve_use_kernel",
+    "survivors",
+    "topk_ids",
+    "verify_store",
+]

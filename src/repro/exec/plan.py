@@ -1,0 +1,254 @@
+"""SearchPlan: one compiled, cached execution plan per (params, topology).
+
+`compile_plan(index, queries, params)` resolves the user's `SearchParams`
+against the index's topology (source rewrites, kernel-toggle pinning, store /
+shard-count validation), builds the staged executable for that topology, and
+caches it in an explicit `PlanCache` keyed on
+
+    (topology, resolved params, index pytree structure + leaf shapes/dtypes,
+     query batch shape)
+
+-- exactly what `jax.jit` retraces on, made visible: a cache *hit* is a
+guarantee of no retrace, a *miss* is a compile, and the counters are surfaced
+through `RetrievalEngine.stats` so serving never silently retraces.
+
+Topologies register through `register_topology` the same way candidate
+sources register in `repro.core.sources`: the monolithic and segmented
+adapters live in `repro.exec.topology`, the sharded adapter in
+`repro.shard.search` (imported via `repro.core`, so all three are present
+whenever the package is).  An adapter is two functions:
+
+    resolve(index, params) -> SearchParams   validate + rewrite (host-side,
+                                             before any tracing)
+    build(index, params)   -> run(index, queries) -> (ids, dists)
+                                             construct the plan's executable;
+                                             `run` owns its own jit objects,
+                                             so one plan == one compile
+
+New topologies (replicated read-split indexes, hierarchical shard trees, a
+fused Pallas CSA-probe dispatch, ...) plug in without touching the index
+classes -- the single dispatch point the exec refactor exists to provide.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Any, Callable
+
+import jax
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover -- leaf module: core imports stay lazy
+    from repro.core.params import SearchParams
+
+Runner = Callable[[Any, jax.Array], tuple[jax.Array, jax.Array]]
+
+
+# ---------------------------------------------------------------------------
+# Topology adapter registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TopologyAdapter:
+    name: str
+    resolve: Callable[[Any, SearchParams], SearchParams]
+    build: Callable[[Any, SearchParams], Runner]
+
+
+_TOPOLOGIES: dict[str, TopologyAdapter] = {}
+
+
+def register_topology(name: str, *, resolve, build) -> TopologyAdapter:
+    """Register a topology adapter (re-registering overwrites, mirroring
+    `register_source`)."""
+    adapter = TopologyAdapter(name=name, resolve=resolve, build=build)
+    _TOPOLOGIES[name] = adapter
+    return adapter
+
+
+def available_topologies() -> tuple[str, ...]:
+    return tuple(sorted(_TOPOLOGIES))
+
+
+def topology_of(index) -> str:
+    """An index declares its topology via a `topology` class attribute
+    ("monolithic" | "segmented" | "sharded"); unmarked index-likes (test
+    doubles, external classes serving the LCCSIndex protocol) default to
+    monolithic."""
+    return getattr(index, "topology", "monolithic")
+
+
+def get_topology(name: str) -> TopologyAdapter:
+    try:
+        return _TOPOLOGIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown index topology {name!r}; available: "
+            f"{available_topologies()}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# The plan + its cache
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SearchPlan:
+    """A compiled (or compile-on-first-call) staged search pipeline, pinned
+    to one (topology, resolved params, index structure, query shape) key.
+    Calling it with any index/queries matching the key reuses the same
+    executable -- leaf *values* may vary freely, shapes may not."""
+
+    topology: str
+    params: "SearchParams"  # resolved: sources rewritten, kernel toggle pinned
+    key: tuple = field(repr=False)
+    run: Runner = field(repr=False)
+
+    def __call__(self, index, queries):
+        return self.run(index, queries)
+
+
+class PlanCache:
+    """LRU cache of `SearchPlan`s with explicit hit/miss counters.
+
+    misses == number of plans built == number of pipeline compiles (each
+    plan's executables are private to it and only ever see one shape), so
+    `stats()` is a retrace audit: a serving loop whose miss counter is flat
+    is provably not recompiling."""
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._plans: OrderedDict[tuple, SearchPlan] = OrderedDict()
+        self._lock = threading.Lock()
+
+    def get_or_build(self, key: tuple,
+                     builder: Callable[[], SearchPlan]) -> tuple:
+        """Fetch or build the plan for `key`.  Returns (plan, hit): callers
+        that attribute cache activity (engine stats) use the per-call `hit`
+        flag rather than diffing the global counters, which would misattribute
+        concurrent callers' activity."""
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self.hits += 1
+                self._plans.move_to_end(key)
+                return plan, True
+        # build outside the lock: plan construction may be slow (jit setup)
+        # and double-building on a race is harmless (last writer wins)
+        plan = builder()
+        with self._lock:
+            self.misses += 1
+            self._plans[key] = plan
+            self._plans.move_to_end(key)
+            while len(self._plans) > self.maxsize:
+                self._plans.popitem(last=False)
+                self.evictions += 1
+        return plan, False
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "size": len(self._plans),
+        }
+
+    def clear(self) -> None:
+        """Drop every plan and zero the counters (test isolation)."""
+        with self._lock:
+            self._plans.clear()
+            self.hits = self.misses = self.evictions = 0
+
+
+_CACHE = PlanCache()
+
+
+def plan_cache() -> PlanCache:
+    """The process-global plan cache (one per process, like jit's)."""
+    return _CACHE
+
+
+# ---------------------------------------------------------------------------
+# compile / execute
+# ---------------------------------------------------------------------------
+
+
+def _leaf_sig(x) -> tuple:
+    shape = np.shape(x)
+    dtype = getattr(x, "dtype", None)
+    return (shape, str(dtype) if dtype is not None else type(x).__name__)
+
+
+def _index_signature(index) -> tuple:
+    """Hashable (treedef, leaf shapes/dtypes) fingerprint of an index pytree:
+    the part of the index `jax.jit` specializes on.  Mutating leaf values
+    (inserts, deletes, device moves) preserves it; growing a buffer or
+    compacting a segment stack (treedef / shape change) does not."""
+    leaves, treedef = jax.tree_util.tree_flatten(index)
+    return (treedef, tuple(_leaf_sig(x) for x in leaves))
+
+
+def _default_params():
+    from repro.core.params import SearchParams, _suppress_width_warning
+
+    # params=None means "the documented defaults": constructing them inside
+    # the library must not fire the WindowWidthWarning from an internal
+    # frame -- the warning is for params the caller actually spelled out
+    with _suppress_width_warning():
+        return SearchParams()
+
+
+def resolve_params(index, params: "SearchParams | None") -> "SearchParams":
+    """Topology-aware params resolution only (no plan build): source
+    rewrites, kernel pinning, store/shard validation."""
+    adapter = get_topology(topology_of(index))
+    return adapter.resolve(index, params or _default_params())
+
+
+def compile_plan(index, queries, params: "SearchParams | None" = None,
+                 *, return_hit: bool = False):
+    """Resolve + build (or fetch) the plan for searching `index` with query
+    batches shaped like `queries` (an array, or a plain (B, d) shape tuple).
+    The heavy XLA compile itself still happens lazily on the plan's first
+    call; one plan compiles at most once.  With `return_hit=True` returns
+    (plan, hit) -- the race-free way for a caller to attribute this call's
+    cache outcome to itself (diffing the global counters would absorb
+    concurrent callers' activity)."""
+    adapter = get_topology(topology_of(index))
+    p = adapter.resolve(index, params or _default_params())
+    if isinstance(queries, tuple):  # plain shape: execute() casts to float32
+        qsig = (tuple(queries), "float32")
+    else:
+        qsig = _leaf_sig(queries)  # shape AND dtype: a same-shape batch of a
+        # different dtype would retrace inside the plan's jit, so it must be
+        # a different plan for the hit == no-retrace audit to hold
+    key = (adapter.name, p, _index_signature(index), qsig)
+    plan, hit = _CACHE.get_or_build(
+        key,
+        lambda: SearchPlan(
+            topology=adapter.name, params=p, key=key,
+            run=adapter.build(index, p),
+        ),
+    )
+    return (plan, hit) if return_hit else plan
+
+
+def execute(index, queries, params: "SearchParams | None" = None):
+    """The unified search entry point: every topology, every store, every
+    candidate source -- one staged hash -> probe -> gather -> verify -> merge
+    plan, compiled once per (params, shapes) and cached explicitly.
+    Returns (ids (B, k), dists (B, k))."""
+    import jax.numpy as jnp
+
+    queries = jnp.asarray(queries, jnp.float32)
+    plan = compile_plan(index, queries, params)
+    return plan.run(index, queries)

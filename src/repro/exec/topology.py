@@ -1,0 +1,123 @@
+"""Monolithic + segmented topology adapters (the sharded adapter lives in
+`repro.shard.search`, next to its shard_map plumbing).
+
+Both adapters run the SAME staged pipeline (`search_pipeline` below); the
+segmented index differs only in params resolution -- its per-segment fan-out
+and exact candidate merge are inside the registered "segmented" candidate
+source, which is itself built from `repro.exec.stages` -- so the adapter
+bodies stay a few lines each.  The one genuinely different *execution shape*
+is the disk-lazy rerank tail: a quantized monolithic index whose fp32 rows
+live in an .npy cannot gather them inside a trace, so its plan splits into
+jitted stage 1 (hash -> probe -> survivors), a host memmap gather, and the
+shared jitted rerank stage.  That orchestration lives here -- in exactly one
+place -- and nowhere else.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import SearchParams, _suppress_width_warning
+from repro.store import tail as tail_mod
+
+from . import stages
+from .plan import register_topology
+
+
+# ---------------------------------------------------------------------------
+# Pure pipeline bodies (composable, trace-friendly)
+# ---------------------------------------------------------------------------
+
+
+def search_pipeline(index, queries: jax.Array, params: SearchParams):
+    """hash -> probe -> verify over one resident-data index: the staged form
+    of the paper's full query algorithm.  Pure function of a pytree index;
+    `params` must be static under jit."""
+    qh = stages.hash_queries(index.family, queries)
+    cand_ids, _ = stages.probe(index, queries, qh, params)
+    return stages.verify(
+        index.store, index.tail, queries, cand_ids, params,
+        params.metric or index.metric,
+    )
+
+
+def survivor_pipeline(index, queries: jax.Array, params: SearchParams):
+    """hash -> probe -> stage-1 survivors only: the jitted front half of the
+    disk-tail split plan.  Returns survivor ids (B, R)."""
+    qh = stages.hash_queries(index.family, queries)
+    cand_ids, _ = stages.probe(index, queries, qh, params)
+    surv, _ = stages.survivors(
+        index.store, queries, cand_ids, params, params.metric or index.metric
+    )
+    return surv
+
+
+def has_disk_tail(index) -> bool:
+    """True when the index's exact rerank rows live on disk (quantized store,
+    no resident tail, `tail_path` set) -- the one layout that cannot serve
+    from a single jit."""
+    return (
+        not index.store.exact
+        and index.tail is None
+        and bool(getattr(index, "tail_path", None))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Adapters
+# ---------------------------------------------------------------------------
+
+
+def _resolve_common(index, p: SearchParams) -> SearchParams:
+    # pin the tri-state kernel toggle to a concrete bool so the resolved
+    # value participates in the plan key (a later env-var change cannot be
+    # seen by an already-compiled executable).  Derived copies suppress the
+    # construction-time WindowWidthWarning: the user's params already warned.
+    if p.use_gather_kernel is None:
+        with _suppress_width_warning():
+            p = p.replace(use_gather_kernel=stages.resolve_use_kernel(None))
+    # host-side early validation: same error the verify stage raises at
+    # trace time, surfaced before any compilation work
+    stages.check_store_kind(index.store, p)
+    return p
+
+
+def _monolithic_resolve(index, p: SearchParams) -> SearchParams:
+    return _resolve_common(index, p)
+
+
+def _monolithic_build(index, p: SearchParams):
+    if not has_disk_tail(index):
+        return jax.jit(partial(search_pipeline, params=p))
+
+    stage1 = jax.jit(partial(survivor_pipeline, params=p))
+
+    def run(idx, queries):
+        # split plan: jitted stage 1 -> host memmap gather -> jitted rerank
+        surv = stage1(idx, queries)
+        rows = jnp.asarray(tail_mod.gather_tail(idx.tail_path, surv))
+        return stages.rerank_rows(rows, queries, surv, p.k,
+                                  p.metric or idx.metric)
+
+    return run
+
+
+def _segmented_resolve(index, p: SearchParams) -> SearchParams:
+    # `p.source` names the *per-segment* source; rewrite it onto the
+    # registered "segmented" wrapper (source="segmented", inner=<source>)
+    if p.source != "segmented":
+        with _suppress_width_warning():
+            p = p.replace(source="segmented", inner=p.source)
+    return _resolve_common(index, p)
+
+
+register_topology(
+    "monolithic", resolve=_monolithic_resolve, build=_monolithic_build
+)
+# a segmented index always keeps its rerank tail resident (disk-lazy tails
+# are a static-index feature), so its executable is the plain one-jit body
+register_topology(
+    "segmented", resolve=_segmented_resolve, build=_monolithic_build
+)

@@ -87,15 +87,20 @@ def main():
                  "(the sharded layout is static)")
     _ensure_devices(args.shards)
 
+    # any width-vs-lam warning fires once, on the from_legacy construction;
+    # the chained field replaces below derive from the same user choice
+    from repro.core.params import _suppress_width_warning
+
     search_params = SearchParams.from_legacy(
         k=args.k, lam=args.lam, probes=args.probes
     )
-    search_params = search_params.replace(store=args.store,
-                                          rerank_mult=args.rerank_mult)
-    if args.shards > 1:
-        search_params = search_params.replace(shards=args.shards)
-    if args.source:
-        search_params = search_params.replace(source=args.source)
+    with _suppress_width_warning():
+        search_params = search_params.replace(store=args.store,
+                                              rerank_mult=args.rerank_mult)
+        if args.shards > 1:
+            search_params = search_params.replace(shards=args.shards)
+        if args.source:
+            search_params = search_params.replace(source=args.source)
 
     cfg = ARCHS[args.arch]
     if args.smoke:
@@ -147,6 +152,12 @@ def main():
         f"[launch.serve] {s.requests} requests / {s.batches} batches; "
         f"embed {s.embed_s:.2f}s search {s.search_s:.2f}s; "
         f"self-retrieval {hits}/{args.requests}"
+    )
+    # retrace audit: plan misses are staged-pipeline compiles (repro.exec);
+    # a steady-state serving loop must show a flat miss count
+    print(
+        f"[launch.serve] plan cache: {s.plan_misses} compiles / "
+        f"{s.plan_hits} reuses across {s.batches} batches"
     )
     if args.dynamic:
         idx = engine.index

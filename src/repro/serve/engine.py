@@ -13,7 +13,13 @@ workload with one of the assigned backbones in the loop).
 
 All query-phase knobs arrive as one `SearchParams` (static under jit): the
 engine holds a default, and both the embedding and the whole
-hash -> candidates -> verify pipeline run as compiled computations.
+hash -> candidates -> verify pipeline run as compiled computations.  Every
+search -- monolithic, segmented, or sharded -- goes through the unified
+execution layer (`repro.exec.execute`): one staged plan per (params, index
+structure, query shape), cached explicitly.  The engine's `stats` carry the
+plan-cache hit/miss deltas attributable to its own serving calls, so a
+deployment can assert it never silently retraces (`plan_misses` flat while
+`plan_hits` grows == every batch reused a compiled plan).
 """
 from __future__ import annotations
 
@@ -25,9 +31,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LCCSIndex, SearchParams, SegmentedLCCSIndex, jit_search
+from repro.compat import ReproDeprecationWarning
+from repro.core import LCCSIndex, SearchParams, SegmentedLCCSIndex
+from repro.exec import compile_plan
 from repro.models import lm
-from repro.shard import ShardedLCCSIndex, make_shard_mesh
+from repro.shard import make_shard_mesh
 
 DEFAULT_PARAMS = SearchParams(k=5, lam=64)
 
@@ -41,6 +49,11 @@ class ServeStats:
     inserts: int = 0
     deletes: int = 0
     compactions: int = 0
+    # plan-cache deltas from this engine's serving calls (repro.exec):
+    # plan_misses counts staged-pipeline compiles, plan_hits reuses -- a
+    # steady-state serving loop must only ever grow plan_hits
+    plan_hits: int = 0
+    plan_misses: int = 0
 
 
 class RetrievalEngine:
@@ -135,7 +148,7 @@ class RetrievalEngine:
             warnings.warn(
                 "k=/lam=/probes= kwargs to serve_batch/serve_stream are "
                 "deprecated; pass a SearchParams",
-                DeprecationWarning,
+                ReproDeprecationWarning,
                 stacklevel=3,
             )
             base = params or self.search_params
@@ -156,17 +169,20 @@ class RetrievalEngine:
         # silently crediting embed time to search_s
         jax.block_until_ready(q_emb)
         t1 = time.perf_counter()
-        if isinstance(self.index, (SegmentedLCCSIndex, ShardedLCCSIndex)):
-            # rewrites p onto the wrapping "segmented"/"sharded" source
-            ids, dists = self.index.search(jnp.asarray(q_emb), p)
-        else:
-            ids, dists = jit_search(self.index, jnp.asarray(q_emb), p)
+        # one entry point for every topology: the plan resolves the source
+        # rewrite ("segmented"/"sharded") and caches the compiled pipeline.
+        # return_hit attributes THIS call's cache outcome race-free (other
+        # engines/threads may be compiling concurrently).
+        plan, hit = compile_plan(self.index, q_emb, p, return_hit=True)
+        ids, dists = plan.run(self.index, jnp.asarray(q_emb, jnp.float32))
         jax.block_until_ready(dists)
         t2 = time.perf_counter()
         self.stats.requests += query_tokens.shape[0]
         self.stats.batches += 1
         self.stats.embed_s += t1 - t0
         self.stats.search_s += t2 - t1
+        self.stats.plan_hits += int(hit)
+        self.stats.plan_misses += int(not hit)
         return np.asarray(ids), np.asarray(dists)
 
     def serve_stream(self, requests: list,

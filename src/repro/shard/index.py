@@ -114,6 +114,9 @@ class ShardedLCCSIndex:
     # class marker so repro.core can guard without importing this package
     sharded = True
     tail_path = None  # disk-lazy tails are a monolithic-index feature
+    # topology marker consumed by the repro.exec plan dispatch (the adapter
+    # itself is registered by repro.shard.search)
+    topology = "sharded"
 
     # -- construction -------------------------------------------------------
 
@@ -179,30 +182,15 @@ class ShardedLCCSIndex:
     # -- search -------------------------------------------------------------
 
     def search(self, queries, params: SearchParams | None = None):
-        """c-k-ANNS over all shards, jitted end to end.  `params.source`
-        names the per-shard candidate source; it is rewritten onto the
-        "sharded" registry entry (source="sharded", inner=<source>), the
-        same spelling `SegmentedLCCSIndex` uses for "segmented"."""
-        from repro.core.verify import resolve_use_kernel
+        """c-k-ANNS over all shards, jitted end to end via the plan cache
+        (`repro.exec`).  `params.source` names the per-shard candidate
+        source; the "sharded" topology adapter (`repro.shard.search`)
+        rewrites it onto the "sharded" registry entry (source="sharded",
+        inner=<source>), pins the kernel toggle, and validates the
+        `params.shards` topology pin."""
+        from repro.exec import execute
 
-        from .search import jit_sharded_search
-
-        p = params or SearchParams()
-        if p.source == "segmented":
-            raise ValueError(
-                "source='segmented' needs a SegmentedLCCSIndex; a sharded "
-                "index runs per-shard sources ('lccs', 'bruteforce', ...)"
-            )
-        if p.source != "sharded":
-            p = p.replace(source="sharded", inner=p.source)
-        if p.use_gather_kernel is None:  # concrete bool -> jit cache key
-            p = p.replace(use_gather_kernel=resolve_use_kernel(None))
-        if p.shards is not None and p.shards != self.shards:
-            raise ValueError(
-                f"SearchParams(shards={p.shards}) does not match this index's "
-                f"{self.shards} shards"
-            )
-        return jit_sharded_search(self, jnp.asarray(queries, jnp.float32), p)
+        return execute(self, queries, params)
 
 
 jax.tree_util.register_dataclass(

@@ -1,31 +1,36 @@
-"""Sharded query pipeline: shard_map over per-shard LCCS search + verify,
-finished by an all_gather + exact global top-k merge.
+"""Sharded query pipeline: shard_map over the shared exec stages, finished
+by an all_gather + the shared global top-k merge.
 
-Every shard runs the SAME pipeline a monolithic `LCCSIndex` runs over its
-local rows -- the registered candidate source named by ``params.inner``
-(``params.source`` is "sharded"), then candidate verification against the
-shard's own `VectorStore` slice:
+Every shard runs the SAME staged pipeline a monolithic `LCCSIndex` runs over
+its local rows -- the registered candidate source named by ``params.inner``
+(``params.source`` is "sharded"), then the `repro.exec.stages` verification
+over the shard's own `VectorStore` slice:
 
-  exact stores   shard-local exact distances -> local top-k ->
-                 all_gather (B, S, k) -> global top-k.  Identical to the
-                 monolithic result over the union of per-shard candidates
+  exact stores   `stages.exact_topk` per shard (global ids reported) ->
+                 all_gather (B, S*k) -> `stages.merge_topk`.  Identical to
+                 the monolithic result over the union of per-shard candidates
                  (LCCS scoring and verification are pointwise per row).
-  inexact stores per-shard stage-1 approximate scan keeps the best
-                 R = min(k * rerank_mult, lam) local survivors and gathers
-                 their fp32 tail rows; survivors (ids, approx dists, rows)
-                 are all_gather'd, cut back to the best R globally by approx
-                 distance -- reproducing the monolithic two-stage survivor
-                 set -- and reranked exactly once, replicated on every shard.
+  inexact stores per-shard `stages.survivors` keeps the best
+                 R = min(k * rerank_mult, lam) local survivors and
+                 `stages.gather_fp32` fetches their rerank rows; survivors
+                 (ids, approx dists, rows) are all_gather'd,
+                 `stages.cut_survivors` reproduces the monolithic stage-1
+                 survivor set, and one `stages.rerank_rows` runs replicated
+                 on every shard.
 
-Global ids come from the per-shard `gid` arrays (true row offsets), so uneven
-splits are exact: padded rows carry gid = -1 and are masked out before the
-merge, never silently aliased onto real rows (the `shard_id * (n // S)`
-arithmetic of the old `core.distributed` sketch was wrong whenever
-``n % S != 0``).
+This module owns ONLY the shard_map plumbing and collectives; the two-stage
+rerank and every top-k merge are the same functions the monolithic and
+segmented paths call (DESIGN.md §2).  Global ids come from the per-shard
+`gid` arrays via `stages.local_to_global`, so uneven splits are exact:
+padded rows carry gid = -1 and are masked out before the merge, never
+silently aliased onto real rows (the `shard_id * (n // S)` arithmetic of the
+old `core.distributed` sketch was wrong whenever ``n % S != 0``).
 
 The "sharded" candidate-source registry entry exposes candidate generation
-alone (global ids, merged by LCP), so `jit_candidates` and any code built on
-the source registry composes with a `ShardedLCCSIndex` unchanged.
+alone (global ids, merged by LCP), and the "sharded" *topology adapter*
+registered here plugs the whole pipeline into `repro.exec.compile_plan`, so
+`execute`/`jit_search` serve a `ShardedLCCSIndex` through the same plan
+cache as every other index.
 
 Everything is expressed with `shard_map` so the collective schedule (one
 all_gather of k or R rows per shard per query batch) is explicit and
@@ -40,12 +45,11 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core import verify as verify_mod
 from repro.core.csa import CSA
 from repro.core.index import LCCSIndex
 from repro.core.params import SearchParams
-from repro.core.search import dedupe_topk
 from repro.core.sources import get_source, register_source
+from repro.exec import execute as _execute, register_topology, stages
 
 from .index import ShardedLCCSIndex, _row_spec
 
@@ -67,14 +71,6 @@ def _local_view(family, store, h, csa, gid, tail, metric):
         tail=None if tail is None else tail[0],
     )
     return view, gid[0]
-
-
-def _to_global(ids_local: jax.Array, gid_l: jax.Array) -> jax.Array:
-    """Map shard-local candidate ids to global ids; -1 padding (and local
-    padded rows, gid -1) stays -1."""
-    rows = gid_l.shape[0]
-    g = jnp.where(ids_local >= 0, gid_l[jnp.clip(ids_local, 0, rows - 1)], -1)
-    return g
 
 
 def _shard_call(index: ShardedLCCSIndex, local_fn, out_specs):
@@ -103,7 +99,7 @@ def _shard_call(index: ShardedLCCSIndex, local_fn, out_specs):
 
 
 # ---------------------------------------------------------------------------
-# Full pipeline: candidates -> per-shard verify -> global merge
+# Full pipeline: probe -> per-shard verify stages -> all_gather + merge stage
 # ---------------------------------------------------------------------------
 
 
@@ -111,30 +107,25 @@ def _local_search(family, store, h, csa, gid, tail, queries, qh,
                   *, params, metric, axis):
     view, gid_l = _local_view(family, store, h, csa, gid, tail, metric)
     ids_l, _ = get_source(_inner_name(params))(view, queries, qh, params)
-    g = _to_global(ids_l, gid_l)
+    g = stages.local_to_global(ids_l, gid_l)
     ids_l = jnp.where(g >= 0, ids_l, -1)  # mask padded rows before gathers
-    use_kernel = verify_mod.resolve_use_kernel(params.use_gather_kernel)
+    use_kernel = stages.resolve_use_kernel(params.use_gather_kernel)
     B = queries.shape[0]
 
     if view.store.exact:
-        # single-stage: exact local distances, local top-k, merged top-k
-        dist = view.store.gather_dist(
-            ids_l, queries, metric=metric, use_kernel=use_kernel
+        # single-stage: shard-local exact_topk (global ids), merged top-k
+        ids_k, d_k = stages.exact_topk(
+            view.store, queries, ids_l, g, params.k, metric, use_kernel
         )
-        kk = min(params.k, ids_l.shape[1])
-        neg, sel = jax.lax.top_k(-dist, kk)
-        ids_k = jnp.take_along_axis(g, sel, axis=1)
         all_ids = jax.lax.all_gather(ids_k, axis, axis=1).reshape(B, -1)
-        all_d = jax.lax.all_gather(-neg, axis, axis=1).reshape(B, -1)
-        return verify_mod._topk_ids(all_d, all_ids, params.k)
+        all_d = jax.lax.all_gather(d_k, axis, axis=1).reshape(B, -1)
+        return stages.merge_topk(all_d, all_ids, params.k)
 
     # two-stage: per-shard stage-1 scan, merged exact rerank
-    surv_l, approx = verify_mod.survivors(view.store, queries, ids_l,
-                                          params, metric)
-    g_surv = _to_global(surv_l, gid_l)
-    safe = jnp.maximum(surv_l, 0)
-    rows_f = (view.tail[safe] if view.tail is not None
-              else view.store.gather(surv_l))  # (B, R, d) fp32
+    surv_l, approx = stages.survivors(view.store, queries, ids_l,
+                                      params, metric)
+    g_surv = stages.local_to_global(surv_l, gid_l)
+    rows_f = stages.gather_fp32(view.store, view.tail, surv_l)  # (B, R, d)
     all_ids = jax.lax.all_gather(g_surv, axis, axis=1).reshape(B, -1)
     all_a = jax.lax.all_gather(approx, axis, axis=1).reshape(B, -1)
     all_rows = jax.lax.all_gather(rows_f, axis, axis=1).reshape(
@@ -143,25 +134,16 @@ def _local_search(family, store, h, csa, gid, tail, queries, qh,
     # cut the merged pool back to the monolithic stage-1 survivor set: the
     # global top-R by approximate distance (each shard's local top-R is a
     # superset of its members of the global top-R, so nothing is lost)
-    r = min(max(params.k * params.rerank_mult, params.k),
-            params.lam, all_a.shape[1])
-    _, sel = jax.lax.top_k(-all_a, r)
-    ids_sel = jnp.take_along_axis(all_ids, sel, axis=1)
-    rows_sel = jnp.take_along_axis(all_rows, sel[..., None], axis=1)
-    return verify_mod.rerank_rows(rows_sel, queries, ids_sel, params.k, metric)
+    ids_sel, rows_sel = stages.cut_survivors(all_ids, all_a, all_rows, params)
+    return stages.rerank_rows(rows_sel, queries, ids_sel, params.k, metric)
 
 
-def search(index: ShardedLCCSIndex, queries: jax.Array, params: SearchParams):
-    """Full sharded c-k-ANNS: hash -> per-shard source -> per-shard verify ->
-    all_gather + exact global top-k.  Pure function of the index pytree;
-    `params` must be static under jit (see `jit_sharded_search`)."""
-    if not isinstance(index, ShardedLCCSIndex):
-        raise TypeError(
-            "repro.shard.search needs a ShardedLCCSIndex; monolithic indexes "
-            "use repro.core.index.search"
-        )
+def _search_impl(index: ShardedLCCSIndex, queries: jax.Array,
+                 *, params: SearchParams):
+    """The traced sharded pipeline body (no guards): hash once, shard_map the
+    per-shard stages, merge globally."""
     queries = jnp.asarray(queries, jnp.float32)
-    qh = index.family.hash(queries)
+    qh = stages.hash_queries(index.family, queries)
     metric = params.metric or index.metric
     fn = _shard_call(
         index,
@@ -172,7 +154,58 @@ def search(index: ShardedLCCSIndex, queries: jax.Array, params: SearchParams):
               index.tail, queries, qh)
 
 
-jit_sharded_search = jax.jit(search, static_argnames="params")
+def search(index: ShardedLCCSIndex, queries: jax.Array, params: SearchParams):
+    """Full sharded c-k-ANNS: hash -> per-shard source -> per-shard verify ->
+    all_gather + exact global top-k.  Pure function of the index pytree;
+    `params` must be static under jit (compose your own, or use
+    `jit_sharded_search` / `repro.exec.execute` for the plan-cached route)."""
+    if not isinstance(index, ShardedLCCSIndex):
+        raise TypeError(
+            "repro.shard.search needs a ShardedLCCSIndex; monolithic indexes "
+            "use repro.core.index.search"
+        )
+    return _search_impl(index, queries, params=params)
+
+
+def jit_sharded_search(index, queries, params: SearchParams):
+    """Compiled sharded search -- a thin wrapper over
+    `repro.exec.compile_plan` (the "sharded" topology adapter below), sharing
+    the process plan cache and its retrace counters."""
+    return _execute(index, queries, params)
+
+
+# ---------------------------------------------------------------------------
+# The "sharded" topology adapter (repro.exec plan integration)
+# ---------------------------------------------------------------------------
+
+
+def _sharded_resolve(index, p: SearchParams) -> SearchParams:
+    from repro.core.params import _suppress_width_warning
+
+    if p.source == "segmented":
+        raise ValueError(
+            "source='segmented' needs a SegmentedLCCSIndex; a sharded "
+            "index runs per-shard sources ('lccs', 'bruteforce', ...)"
+        )
+    with _suppress_width_warning():  # derived copy: user params already warned
+        if p.source != "sharded":
+            p = p.replace(source="sharded", inner=p.source)
+        if p.use_gather_kernel is None:  # concrete bool -> plan key
+            p = p.replace(use_gather_kernel=stages.resolve_use_kernel(None))
+    if p.shards is not None and p.shards != index.shards:
+        raise ValueError(
+            f"SearchParams(shards={p.shards}) does not match this index's "
+            f"{index.shards} shards"
+        )
+    stages.check_store_kind(index.store, p)
+    return p
+
+
+def _sharded_build(index, p: SearchParams):
+    return jax.jit(partial(_search_impl, params=p))
+
+
+register_topology("sharded", resolve=_sharded_resolve, build=_sharded_build)
 
 
 # ---------------------------------------------------------------------------
@@ -196,12 +229,12 @@ def sharded_source(index, queries, qh, params):
         view, gid_l = _local_view(family, store, h, csa, gid, tail,
                                   params.metric or index.metric)
         ids_l, lcps = get_source(params.inner)(view, queries_l, qh_l, params)
-        g = _to_global(ids_l, gid_l)
+        g = stages.local_to_global(ids_l, gid_l)
         lcps = jnp.where(g >= 0, lcps, -1)
         B = queries_l.shape[0]
         all_g = jax.lax.all_gather(g, index.axis, axis=1).reshape(B, -1)
         all_l = jax.lax.all_gather(lcps, index.axis, axis=1).reshape(B, -1)
-        return jax.vmap(lambda i, l: dedupe_topk(i, l, params.lam))(all_g, all_l)
+        return stages.merge_candidates(all_g, all_l, params.lam)
 
     fn = _shard_call(index, local, out_specs=(P(), P()))
     return fn(index.family, index.store, index.h, index.csa, index.gid,

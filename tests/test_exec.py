@@ -1,0 +1,280 @@
+"""The unified query-execution layer (`repro.exec`): plan-based search must
+return exactly what the pre-refactor per-topology pipelines returned (parity
+sweep over source x store x topology, incl. the disk-tail split plan), the
+plan cache must compile once per (params, shapes) (retrace guard), and the
+`width < lam` footgun must warn."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    LCCSIndex,
+    SearchParams,
+    SegmentedLCCSIndex,
+    WindowWidthWarning,
+    jit_search,
+)
+from repro.exec import (
+    available_topologies,
+    compile_plan,
+    execute,
+    plan_cache,
+    resolve_params,
+    topology_of,
+)
+
+N, D, B = 300, 16, 4
+SOURCES = ("bruteforce", "lccs", "multiprobe-full", "multiprobe-skip")
+STORES = ("fp32", "bf16", "int8")
+# complete-coverage regime (cf. tests/test_shard.py): lam and width cover
+# every row and rerank_mult covers every survivor, so candidate sets provably
+# coincide across topologies -- any deviation is a merge/offset/plan bug, not
+# tie noise
+BASE = SearchParams(k=6, lam=N + 12, width=N + 12, rerank_mult=64,
+                    use_gather_kernel=False)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(N, D)).astype(np.float32)
+    Q = rng.normal(size=(B, D)).astype(np.float32)
+    return X, Q
+
+
+def _params(source):
+    return BASE.replace(source=source,
+                        probes=3 if "multiprobe" in source else 1)
+
+
+def test_topology_registry_complete():
+    assert set(available_topologies()) >= {"monolithic", "segmented",
+                                           "sharded"}
+
+
+# ---------------------------------------------------------------------------
+# Parity sweep: plan-based search == the pure pre-refactor pipelines, and
+# every topology == monolithic, for the full source x store x topology grid
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("store", STORES)
+def test_parity_sweep_source_x_store_x_topology(data, store, tmp_path):
+    from repro.core.index import search as pure_search
+    from repro.shard import make_shard_mesh
+    from repro.shard.search import search as pure_sharded_search
+
+    X, Q = data
+    mono = LCCSIndex.build(X, m=16, family="euclidean", w=4.0, seed=1,
+                           store=store)
+    seg = SegmentedLCCSIndex.build(X, m=16, family="euclidean", w=4.0,
+                                   seed=1, store=store)
+    sharded = mono.shard(make_shard_mesh(1))
+    disk = None
+    if store != "fp32":  # a disk tail only exists for inexact stores
+        disk = LCCSIndex.build(X, m=16, family="euclidean", w=4.0, seed=1,
+                               store=store,
+                               tail_path=tmp_path / f"tail_{store}.npy")
+
+    for source in SOURCES:
+        p = _params(source)
+        tag = f"{store}/{source}"
+        ids_m, d_m = map(np.asarray, execute(mono, Q, p))
+        assert ids_m.shape == (B, p.k) and d_m.shape == (B, p.k)
+
+        # plan route == the retained pure traced body (pre-refactor parity)
+        ids_r, d_r = map(np.asarray, pure_search(mono, jnp.asarray(Q), p))
+        np.testing.assert_array_equal(ids_m, ids_r, err_msg=tag)
+        np.testing.assert_allclose(d_m, d_r, rtol=1e-6, err_msg=tag)
+
+        # segmented topology == monolithic (complete coverage)
+        ids_s, d_s = map(np.asarray, execute(seg, Q, p))
+        np.testing.assert_array_equal(ids_m, ids_s, err_msg=tag)
+        np.testing.assert_allclose(d_m, d_s, rtol=1e-6, err_msg=tag)
+
+        # sharded topology == monolithic, and == its pure traced body
+        ids_h, d_h = map(np.asarray, execute(sharded, Q, p))
+        np.testing.assert_array_equal(ids_m, ids_h, err_msg=tag)
+        np.testing.assert_allclose(d_m, d_h, rtol=1e-6, err_msg=tag)
+        ids_hr, d_hr = map(np.asarray, pure_sharded_search(
+            sharded, jnp.asarray(Q), resolve_params(sharded, p)))
+        np.testing.assert_array_equal(ids_h, ids_hr, err_msg=tag)
+        np.testing.assert_allclose(d_h, d_hr, rtol=1e-6, err_msg=tag)
+
+        # disk-tail split plan == in-memory two-stage (ids and exact dists)
+        if disk is not None:
+            ids_d, d_d = map(np.asarray, execute(disk, Q, p))
+            np.testing.assert_array_equal(ids_m, ids_d, err_msg=tag)
+            np.testing.assert_allclose(d_m, d_d, rtol=1e-6, err_msg=tag)
+
+
+def test_jit_search_wrapper_accepts_every_topology(data, tmp_path):
+    """Migration contract: jit_search is a wrapper over exec.compile_plan and
+    now serves sharded and disk-tail indexes instead of raising."""
+    from repro.shard import make_shard_mesh
+
+    X, Q = data
+    p = _params("lccs")
+    mono = LCCSIndex.build(X, m=16, family="euclidean", w=4.0, seed=2)
+    want = np.asarray(jit_search(mono, Q, p)[0])
+
+    sharded = mono.shard(make_shard_mesh(1))
+    np.testing.assert_array_equal(np.asarray(jit_search(sharded, Q, p)[0]),
+                                  want)
+    disk = LCCSIndex.build(X, m=16, family="euclidean", w=4.0, seed=2,
+                           store="int8", tail_path=tmp_path / "t.npy")
+    np.testing.assert_array_equal(np.asarray(jit_search(disk, Q, p)[0]),
+                                  want)
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: retrace guard + key sensitivity
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_compiles_once_per_params_and_shape(data):
+    X, Q = data
+    idx = LCCSIndex.build(X, m=16, family="euclidean", w=4.0, seed=3)
+    p = SearchParams(k=3, lam=32, use_gather_kernel=False)
+    cache = plan_cache()
+
+    h0, m0 = cache.hits, cache.misses
+    execute(idx, Q, p)  # compile
+    assert (cache.hits, cache.misses) == (h0, m0 + 1)
+    # varying data, fixed params + shapes: reuse, never retrace
+    for off in (1.0, 2.0, 3.0):
+        execute(idx, Q + off, p)
+    assert (cache.hits, cache.misses) == (h0 + 3, m0 + 1)
+    # same plan object both times == same underlying executable
+    assert compile_plan(idx, Q, p) is compile_plan(idx, Q + 9.0, p)
+    # a new query *shape* is a new plan (that is what jit would retrace on)
+    execute(idx, Q[:2], p)
+    assert cache.misses == m0 + 2
+
+
+def test_plan_cache_distinguishes_static_only_fields(data):
+    """Params that differ only in a static field (same results on an exact
+    store) must still be distinct plans -- they compile differently.  (The
+    corpus is trimmed to a unique shape: plans are shared across indexes of
+    identical structure, exactly like jit executables, so a fresh structure
+    isolates this test's miss accounting.)"""
+    X, Q = data
+    idx = LCCSIndex.build(X[: N - 7], m=16, family="euclidean", w=4.0, seed=4)
+    p = SearchParams(k=3, lam=32, use_gather_kernel=False)
+    cache = plan_cache()
+    m0 = cache.misses
+    ids0, _ = execute(idx, Q, p)
+    ids1, _ = execute(idx, Q, p.replace(rerank_mult=9))
+    assert cache.misses == m0 + 2  # static-only difference -> second compile
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+    # ...while a no-op replace stays one plan
+    ids2, _ = execute(idx, Q, p.replace())
+    assert cache.misses == m0 + 2
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids2))
+
+
+def test_plan_cache_mutation_vs_growth_semantics():
+    """Leaf-value mutations (insert/delete within capacity) reuse the plan;
+    capacity growth / compaction (shape or treedef change) rebuilds -- the
+    segmented jit-cache contract, now observable through the plan cache."""
+    rng = np.random.default_rng(5)
+    idx = SegmentedLCCSIndex.create(D, m=16, family="euclidean", w=4.0)
+    idx.insert(rng.normal(size=(4, D)).astype(np.float32))
+    Q = np.zeros((2, D), np.float32)
+    p = SearchParams(k=3, lam=8, use_gather_kernel=False)
+    cache = plan_cache()
+
+    idx.search(Q, p)
+    h0, m0 = cache.hits, cache.misses
+    idx.delete([0])
+    idx.insert(np.ones((2, D), np.float32))  # stays within min capacity
+    idx.search(Q, p)
+    assert (cache.hits, cache.misses) == (h0 + 1, m0)  # pure reuse
+    idx.compact()  # treedef change: buffer rows become a CSA segment
+    idx.search(Q, p)
+    assert cache.misses == m0 + 1
+
+
+def test_engine_stats_surface_plan_counters():
+    """Retrace guard at the serving layer: repeated serve_batch calls with a
+    fixed SearchParams and varying data compile exactly once per (params,
+    shape), observable via RetrievalEngine.stats plan counters."""
+    from repro.configs import ARCHS
+    from repro.data import lm_token_batches
+    from repro.models import api
+    from repro.serve import RetrievalEngine
+
+    cfg = ARCHS["gemma-2b"].smoke()
+    params = api.init_model(jax.random.key(0), cfg)
+    engine = RetrievalEngine(cfg, params, m=16, metric="angular", max_batch=8)
+    corpus, _ = lm_token_batches(vocab=cfg.vocab, seed=3)(0, 32, 16)
+    engine.build_index(corpus)
+    p = SearchParams(k=3, lam=16, use_gather_kernel=False)
+
+    engine.serve_batch(corpus[:8], p)
+    assert engine.stats.plan_misses == 1 and engine.stats.plan_hits == 0
+    for lo in (8, 16, 24):  # varying data, fixed params/shape: no retrace
+        engine.serve_batch(corpus[lo:lo + 8], p)
+    assert engine.stats.plan_misses == 1 and engine.stats.plan_hits == 3
+    # a static-field-only change must be a new compile, not silent reuse
+    engine.serve_batch(corpus[:8], p.replace(rerank_mult=2))
+    assert engine.stats.plan_misses == 2
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the width < lam footgun warns with the recall implication
+# ---------------------------------------------------------------------------
+
+
+def test_width_default_below_lam_warns():
+    with pytest.warns(WindowWidthWarning, match="window-dominance"):
+        p = SearchParams(k=5, lam=100)
+    assert p.resolved_width() == 64  # seed default preserved, but audible
+
+
+def test_width_explicit_or_small_lam_is_silent():
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error", WindowWidthWarning)
+        SearchParams(k=5, lam=100, width=100)   # explicit: guarantee kept
+        SearchParams(k=5, lam=100, width=16)    # explicit: deliberate trade
+        SearchParams(k=5, lam=64)               # default cap not binding
+        SearchParams(k=5, lam=200, source="bruteforce")  # no window involved
+
+
+def test_width_validation_rejects_nonpositive():
+    with pytest.raises(ValueError, match="width"):
+        SearchParams(width=0)
+
+
+def test_internal_param_derivation_never_rewarns(data):
+    """The warning belongs to the user's construction: the exec resolve
+    (kernel pinning, segmented/sharded source rewrites) and the library's
+    params=None default derive new SearchParams on every call and must stay
+    silent -- including the wrapper rewrite of an exempt bruteforce source."""
+    import warnings as _w
+
+    X, Q = data
+    mono = LCCSIndex.build(X, m=16, family="euclidean", w=4.0, seed=6)
+    seg = SegmentedLCCSIndex.build(X, m=16, family="euclidean", w=4.0, seed=6)
+    with pytest.warns(WindowWidthWarning):
+        p_win = SearchParams(k=3, lam=100)  # the one place it should fire
+    p_bf = SearchParams(k=3, lam=100, source="bruteforce")  # exempt
+    with _w.catch_warnings():
+        _w.simplefilter("error", WindowWidthWarning)
+        execute(mono, Q, p_win)   # kernel-pin replace: derived, silent
+        execute(seg, Q, p_win)    # "segmented" rewrite: derived, silent
+        execute(seg, Q, p_bf)     # inner=bruteforce: no window involved
+        execute(mono, Q, None)    # library default params: internal frame
+
+
+def test_topology_of_markers(data):
+    X, _ = data
+    assert topology_of(LCCSIndex.build(X, m=8, family="euclidean",
+                                       w=4.0)) == "monolithic"
+    assert topology_of(
+        SegmentedLCCSIndex.create(D, m=8, family="euclidean", w=4.0)
+    ) == "segmented"
+    assert topology_of(object()) == "monolithic"  # duck-typed default

@@ -295,17 +295,20 @@ def test_segmented_source_rejects_monolithic_index():
 
 
 def test_jit_cache_hit_across_mutations():
-    """Inserts/deletes that do not grow capacity reuse the jit cache; only
-    compaction (treedef change) retraces."""
+    """Inserts/deletes that do not grow capacity reuse the compiled plan;
+    only compaction (treedef change) retraces.  (jit_search is a wrapper
+    over repro.exec now, so the observable is the plan cache, whose misses
+    count compiles.)"""
+    from repro.exec import plan_cache
+
     idx = SegmentedLCCSIndex.create(D, **FAMILY_KW)
     idx.insert(np.random.default_rng(0).normal(size=(4, D)).astype(np.float32))
     Q = np.zeros((2, D), np.float32)
     p = SearchParams(k=3, lam=8)
-    from repro.core.index import jit_search
 
     idx.search(Q, p)
-    before = jit_search._cache_size()
+    before = plan_cache().misses
     idx.delete([0])
     idx.insert(np.ones((2, D), np.float32))  # stays within the min capacity
     idx.search(Q, p)
-    assert jit_search._cache_size() == before
+    assert plan_cache().misses == before

@@ -197,9 +197,16 @@ def test_sharded_source_registered_and_guards(small):
     ids = np.asarray(ids)
     assert ids.shape == (3, 64)
     assert ids.max() < 50 and (ids[ids >= 0] >= 0).all()
-    # the monolithic pipeline refuses a sharded index (stacked store)
+    # the pure monolithic pipeline body still refuses a sharded index
+    # (stacked store); jit_search itself now routes through the sharded
+    # topology plan instead of raising
+    from repro.core.index import search as pure_search
+
     with pytest.raises(TypeError, match="ShardedLCCSIndex"):
-        jit_search(sidx, jnp.asarray(Q), SearchParams(k=3, lam=16))
+        pure_search(sidx, jnp.asarray(Q), SearchParams(k=3, lam=16))
+    ids_j, _ = jit_search(sidx, jnp.asarray(Q),
+                          SearchParams(k=3, lam=16, use_gather_kernel=False))
+    assert np.asarray(ids_j).shape == (3, 3)
     # the "sharded" source refuses a monolithic index
     with pytest.raises(TypeError, match="ShardedLCCSIndex"):
         candidates(mono, jnp.asarray(Q), p)

@@ -189,8 +189,15 @@ def test_disk_lazy_tail_matches_in_memory(tmp_path):
     np.testing.assert_allclose(np.asarray(d_m), np.asarray(d_d), rtol=1e-6)
     # no resident fp32: only the quantized representation counts
     assert disk.store_bytes() == disk.store.nbytes()
+    # the pure traced pipeline cannot gather from disk and says so...
+    from repro.core.index import search as pure_search
+
     with pytest.raises(ValueError, match="disk-lazy"):
-        jit_search(disk, jnp.asarray(Q), p)
+        pure_search(disk, jnp.asarray(Q), p)
+    # ...while jit_search's compiled plan orchestrates the split pipeline
+    ids_j, d_j = jit_search(disk, jnp.asarray(Q), p)
+    np.testing.assert_array_equal(np.asarray(ids_m), np.asarray(ids_j))
+    np.testing.assert_allclose(np.asarray(d_m), np.asarray(d_j), rtol=1e-6)
 
 
 def test_params_store_mismatch_raises_on_disk_tail(tmp_path):
