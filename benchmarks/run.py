@@ -6,8 +6,8 @@ machine-readably.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--smoke]
   --quick  halve the dataset sizes
-  --smoke  fig12 (store sweep) + fig13 (sharded scaling) only, tiny n --
-           the CI gate; still emits BENCH_search.json
+  --smoke  fig12 (store sweep) + fig13 (sharded scaling) + fig14 (serving
+           front) only, tiny n -- the CI gate; still emits BENCH_search.json
 """
 from __future__ import annotations
 
@@ -45,7 +45,7 @@ def main() -> None:
     n = 4000 if quick else 8000
     csv = CsvRows()
     t0 = time.time()
-    from . import fig12_memory, fig13_sharded
+    from . import fig12_memory, fig13_sharded, fig14_serving
 
     if smoke:
         print("# fig12 (smoke): recall vs store bytes / QPS per store", flush=True)
@@ -53,6 +53,12 @@ def main() -> None:
         print("# fig13 (smoke): sharded QPS scaling + exact parity", flush=True)
         search_perf["sharded"] = fig13_sharded.run(
             csv, n=1200, shard_counts=(1, 2, 4), queries=32
+        )
+        print("# fig14 (smoke): serving front -- bursty p99 + replica SLO sweep",
+              flush=True)
+        search_perf["serving"] = fig14_serving.run(
+            csv, corpus_docs=128, max_batch=8,
+            n_bursts=4, burst=20, period_s=0.7, sweep_cap=800
         )
         search_perf["wall_s"] = time.time() - t0
         search_perf["mode"] = "smoke"
@@ -82,6 +88,8 @@ def main() -> None:
     search_perf["sharded"] = fig13_sharded.run(
         csv, n=n, shard_counts=(1, 2, 4, 8), queries=32
     )
+    print("# fig14: serving front -- bursty p99 + replica SLO sweep", flush=True)
+    search_perf["serving"] = fig14_serving.run(csv)
     print("# table1: complexity scaling in n", flush=True)
     table1_scaling.run(csv)
     print("# kernels", flush=True)

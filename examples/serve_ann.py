@@ -3,6 +3,14 @@ backbone embeds a corpus, LCCS-LSH indexes the embeddings, and a stream of
 batched requests is served with verified top-k retrieval.
 
     PYTHONPATH=src python examples/serve_ann.py [--arch gemma-2b]
+
+With --async-serve the same stream goes through the deadline-aware serving
+front (repro.router) instead: requests are submitted one at a time with an
+SLO deadline, replicated engines share one index + one compiled backbone,
+and the router reports end-to-end p50/p95/p99 plus the per-replica
+no-retrace audit.
+
+    PYTHONPATH=src python examples/serve_ann.py --async-serve --replicas 2
 """
 import argparse
 import sys
@@ -21,11 +29,60 @@ from repro.models import api
 from repro.serve import RetrievalEngine
 
 
+def serve_sync(engine, requests, picks, n_requests):
+    t0 = time.perf_counter()
+    results = engine.serve_stream(requests, SearchParams(k=5, lam=64))
+    wall = time.perf_counter() - t0
+    hits = sum(int(picks[i] in ids) for i, (ids, _) in enumerate(results))
+    s = engine.stats
+    print(
+        f"served {s.requests} requests in {s.batches} micro-batches, "
+        f"{wall*1e3/len(requests):.1f} ms/req "
+        f"(embed {s.embed_s:.1f}s search {s.search_s:.1f}s)"
+    )
+    return hits
+
+
+def serve_async(engine, requests, picks, n_requests, replicas, slo_ms):
+    from repro.router import Router
+
+    router = Router.replicate(engine, replicas, default_slo_ms=slo_ms,
+                              params=SearchParams(k=5, lam=64))
+    try:
+        router.warm(requests[0])      # compile once; every replica hits
+        tickets = router.submit_many(requests)
+        outs = [t.result(timeout=300) for t in tickets]
+        router.drain()
+        hits = sum(int(picks[i] in ids) for i, (ids, _) in enumerate(outs))
+        st = router.stats()
+        lat = st.latency
+        print(
+            f"async x{replicas}: {st.completed} served, "
+            f"{st.deadline_misses} SLO misses at {slo_ms:.0f} ms; "
+            f"p50/p95/p99 = {lat['p50_ms']}/{lat['p95_ms']}/{lat['p99_ms']} ms"
+        )
+        for r in st.replicas:
+            print(f"  {r.name}: {r.serve['batches']} batches, "
+                  f"plan {r.serve['plan_misses']} compiles / "
+                  f"{r.serve['plan_hits']} reuses")
+        assert all(r.serve["plan_misses"] == 0 for r in st.replicas), \
+            "a replica retraced in steady state"
+        return hits
+    finally:
+        router.shutdown()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b", choices=sorted(ARCHS))
     ap.add_argument("--corpus", type=int, default=512)
     ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--async-serve", action="store_true",
+                    help="serve through the replica router (repro.router)")
+    ap.add_argument("--replicas", type=int, default=2)
+    # the default deadline budgets a full burst of --requests: the demo
+    # submits them all at once, so queue wait dominates end-to-end latency
+    ap.add_argument("--slo-ms", type=float, default=500.0)
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch].smoke()  # reduced config: CPU-runnable backbone
@@ -36,9 +93,10 @@ def main():
     corpus, _ = gen(0, args.corpus, 32)
 
     engine = RetrievalEngine(cfg, params, m=32, metric="angular", max_batch=32)
-    t0 = time.time()
+    t0 = time.perf_counter()
     engine.build_index(corpus)
-    print(f"corpus indexed: {args.corpus} docs in {time.time()-t0:.1f}s "
+    print(f"corpus indexed: {args.corpus} docs in "
+          f"{time.perf_counter()-t0:.1f}s "
           f"({engine.index.index_bytes()/1e6:.2f} MB)")
 
     # request stream: near-duplicates of corpus docs (known answers)
@@ -46,16 +104,11 @@ def main():
     picks = rng.integers(0, args.corpus, args.requests)
     requests = [corpus[i] for i in picks]
 
-    t0 = time.time()
-    results = engine.serve_stream(requests, SearchParams(k=5, lam=64))
-    wall = time.time() - t0
-    hits = sum(int(picks[i] in ids) for i, (ids, _) in enumerate(results))
-    s = engine.stats
-    print(
-        f"served {s.requests} requests in {s.batches} micro-batches, "
-        f"{wall*1e3/len(requests):.1f} ms/req "
-        f"(embed {s.embed_s:.1f}s search {s.search_s:.1f}s)"
-    )
+    if args.async_serve:
+        hits = serve_async(engine, requests, picks, args.requests,
+                           args.replicas, args.slo_ms)
+    else:
+        hits = serve_sync(engine, requests, picks, args.requests)
     print(f"self-retrieval hit rate: {hits}/{args.requests}")
     assert hits >= 0.9 * args.requests, "retrieval quality regression"
 

@@ -124,19 +124,31 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # per-scope hit/miss attribution: a scope is a caller label (the
+        # serving front passes each replica engine's name), so a fleet can
+        # see WHICH replica compiled what, not just that someone did
+        self.scopes: dict[str, dict[str, int]] = {}
         self._plans: OrderedDict[tuple, SearchPlan] = OrderedDict()
         self._lock = threading.Lock()
 
-    def get_or_build(self, key: tuple,
-                     builder: Callable[[], SearchPlan]) -> tuple:
+    def _scope_bump(self, scope: str | None, field: str) -> None:
+        # callers hold self._lock
+        if scope is None:
+            return
+        self.scopes.setdefault(scope, {"hits": 0, "misses": 0})[field] += 1
+
+    def get_or_build(self, key: tuple, builder: Callable[[], SearchPlan],
+                     scope: str | None = None) -> tuple:
         """Fetch or build the plan for `key`.  Returns (plan, hit): callers
         that attribute cache activity (engine stats) use the per-call `hit`
         flag rather than diffing the global counters, which would misattribute
-        concurrent callers' activity."""
+        concurrent callers' activity.  `scope` additionally tallies the
+        outcome under a caller label (per-replica attribution)."""
         with self._lock:
             plan = self._plans.get(key)
             if plan is not None:
                 self.hits += 1
+                self._scope_bump(scope, "hits")
                 self._plans.move_to_end(key)
                 return plan, True
         # build outside the lock: plan construction may be slow (jit setup)
@@ -144,6 +156,7 @@ class PlanCache:
         plan = builder()
         with self._lock:
             self.misses += 1
+            self._scope_bump(scope, "misses")
             self._plans[key] = plan
             self._plans.move_to_end(key)
             while len(self._plans) > self.maxsize:
@@ -160,12 +173,14 @@ class PlanCache:
             "misses": self.misses,
             "evictions": self.evictions,
             "size": len(self._plans),
+            "scopes": {k: dict(v) for k, v in self.scopes.items()},
         }
 
     def clear(self) -> None:
         """Drop every plan and zero the counters (test isolation)."""
         with self._lock:
             self._plans.clear()
+            self.scopes.clear()
             self.hits = self.misses = self.evictions = 0
 
 
@@ -215,14 +230,17 @@ def resolve_params(index, params: "SearchParams | None") -> "SearchParams":
 
 
 def compile_plan(index, queries, params: "SearchParams | None" = None,
-                 *, return_hit: bool = False):
+                 *, return_hit: bool = False, scope: str | None = None):
     """Resolve + build (or fetch) the plan for searching `index` with query
     batches shaped like `queries` (an array, or a plain (B, d) shape tuple).
     The heavy XLA compile itself still happens lazily on the plan's first
     call; one plan compiles at most once.  With `return_hit=True` returns
     (plan, hit) -- the race-free way for a caller to attribute this call's
     cache outcome to itself (diffing the global counters would absorb
-    concurrent callers' activity)."""
+    concurrent callers' activity).  `scope` labels the outcome in the cache's
+    per-scope tallies (`plan_cache().stats()["scopes"]`); the serving front
+    passes each replica engine's name so a deployment can attribute every
+    compile to the replica that triggered it."""
     adapter = get_topology(topology_of(index))
     p = adapter.resolve(index, params or _default_params())
     if isinstance(queries, tuple):  # plain shape: execute() casts to float32
@@ -238,6 +256,7 @@ def compile_plan(index, queries, params: "SearchParams | None" = None,
             topology=adapter.name, params=p, key=key,
             run=adapter.build(index, p),
         ),
+        scope=scope,
     )
     return (plan, hit) if return_hit else plan
 

@@ -1,7 +1,8 @@
 """Serving launcher: backbone + LCCS-LSH retrieval over a corpus.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
-        --corpus 512 --requests 128 [--ckpt-dir /tmp/run1] [--shards 4]
+        --corpus 512 --requests 128 [--ckpt-dir /tmp/run1] [--shards 4] \
+        [--async --replicas 2 --slo-ms 50]
 Loads trained weights from --ckpt-dir when present (the train launcher's
 output), otherwise serves from random init (layout/perf testing).
 
@@ -9,6 +10,14 @@ output), otherwise serves from random init (layout/perf testing).
 search + exact global top-k merge.  On a CPU host with fewer visible devices
 the launcher re-execs itself once with
 XLA_FLAGS=--xla_force_host_platform_device_count=N (the CI trick).
+
+--async serves the request stream through the deadline-aware serving front
+(repro.router): --replicas N replicated engines (sharing one index + one
+jitted backbone, so plans compile once) behind one submit(), --slo-ms the
+per-request deadline.  The launcher warms every plan, polls the router's
+readiness probe (k8s-style: live workers + warm plan cache), then reports
+the SLO window: p50/p95/p99 end-to-end latency, deadline misses, queue
+depth, and the per-replica retrace audit.
 """
 from __future__ import annotations
 
@@ -50,6 +59,71 @@ def _ensure_devices(n_shards: int) -> None:
               [sys.executable, "-m", "repro.launch.serve"] + sys.argv[1:], env)
 
 
+def _wait_ready(router, timeout_s: float = 120.0, poll_s: float = 0.1) -> float:
+    """Readiness probe: poll the router until every replica has a live
+    worker and a warm plan cache (the k8s-style gate a deployment recipe
+    points its readinessProbe at).  Returns the time-to-ready in seconds."""
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < timeout_s:
+        if router.ready():
+            return time.perf_counter() - t0
+        time.sleep(poll_s)
+    st = router.stats()
+    raise TimeoutError(
+        f"router not ready after {timeout_s:.0f}s: "
+        + ", ".join(f"{r.name}: batches={r.serve['batches']}"
+                    for r in st.replicas)
+    )
+
+
+def _serve_async(engine, corpus, picks, args, search_params) -> None:
+    """The --async serving path: replicate the engine, warm + probe
+    readiness, push the request stream through the deadline-aware front,
+    and report the SLO window + per-replica retrace audit."""
+    from repro.router import QueueFull, Router
+
+    router = Router.replicate(engine, args.replicas, params=search_params,
+                              default_slo_ms=args.slo_ms,
+                              max_depth=args.queue_depth)
+    try:
+        router.warm(corpus[: engine.max_batch])
+        ready_s = _wait_ready(router)
+        print(f"[launch.serve] router ready in {ready_s*1e3:.0f} ms "
+              f"({args.replicas} replicas, slo {args.slo_ms:.0f} ms, "
+              f"queue depth {args.queue_depth})")
+        t0 = time.perf_counter()
+        tickets, rejected = [], 0
+        for i in picks:
+            try:
+                tickets.append((i, router.submit(corpus[i])))
+            except QueueFull as e:
+                rejected += 1
+                time.sleep(e.retry_after_s)
+        outs = [(i, t.result(timeout=300)) for i, t in tickets]
+        router.drain(timeout_s=60)
+        wall = time.perf_counter() - t0
+        hits = sum(int(i in ids) for i, (ids, _) in outs)
+        st = router.stats()
+        lat = st.latency
+        print(
+            f"[launch.serve] async: {st.completed} completed / "
+            f"{st.rejected} rejected / {st.deadline_misses} SLO misses "
+            f"in {wall:.2f}s ({st.completed / wall:.1f} QPS); "
+            f"p50/p95/p99 = {lat['p50_ms']}/{lat['p95_ms']}/{lat['p99_ms']} ms; "
+            f"self-retrieval {hits}/{len(tickets)}"
+        )
+        # retrace audit, now per replica: misses must be flat after warm()
+        for r in st.replicas:
+            print(
+                f"[launch.serve]   {r.name}: {r.serve['batches']} batches, "
+                f"sizes {r.batch_size_hist}, plan "
+                f"{r.serve['plan_misses']} compiles / "
+                f"{r.serve['plan_hits']} reuses"
+            )
+    finally:
+        router.shutdown()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma-2b", choices=sorted(ARCHS))
@@ -80,11 +154,30 @@ def main():
                          "(shard-local search + exact global top-k merge); "
                          "on CPU the launcher re-execs with a fake "
                          "multi-device host platform when needed")
+    ap.add_argument("--async", dest="async_serve", action="store_true",
+                    help="serve through the deadline-aware async front "
+                         "(repro.router): EDF micro-batching, bounded-queue "
+                         "backpressure, SLO latency stats")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica engines behind the router (--async); "
+                         "replicas share one index and one compiled "
+                         "backbone, so plans compile once")
+    ap.add_argument("--slo-ms", type=float, default=500.0,
+                    help="per-request deadline for --async submissions; "
+                         "late answers are served but counted as SLO misses "
+                         "(the default budgets the launcher's all-at-once "
+                         "request burst, where queue wait dominates)")
+    ap.add_argument("--queue-depth", type=int, default=256,
+                    help="per-replica admission bound (--async); beyond it "
+                         "submit() rejects with a retry-after hint")
     args = ap.parse_args()
 
     if args.shards > 1 and args.dynamic:
         ap.error("--shards and --dynamic are mutually exclusive "
                  "(the sharded layout is static)")
+    if args.async_serve and args.dynamic:
+        ap.error("--async serves query traffic; corpus updates (--dynamic) "
+                 "stay on the synchronous stream path")
     _ensure_devices(args.shards)
 
     # any width-vs-lam warning fires once, on the from_legacy construction;
@@ -121,17 +214,23 @@ def main():
                              shards=args.shards if args.shards > 1 else None)
     gen = lm_token_batches(vocab=cfg.vocab, seed=0)
     corpus, _ = gen(0, args.corpus, 32)
-    t0 = time.time()
+    # perf_counter, not time.time: the wall clock can step (NTP) mid-build,
+    # and every other serve-path timer is already monotonic
+    t0 = time.perf_counter()
     engine.build_index(corpus, dynamic=args.dynamic)
     layout = ("dynamic" if args.dynamic
               else f"{args.shards} shards" if args.shards > 1 else "static")
-    print(f"[launch.serve] indexed {args.corpus} docs in {time.time()-t0:.1f}s "
+    print(f"[launch.serve] indexed {args.corpus} docs in "
+          f"{time.perf_counter()-t0:.1f}s "
           f"(index {engine.index.index_bytes()/1e6:.2f} MB + "
           f"{args.store} store {engine.index.store_bytes()/1e6:.2f} MB, "
           f"{layout})")
 
     rng = np.random.default_rng(1)
     picks = rng.integers(0, args.corpus, args.requests)
+    if args.async_serve:
+        _serve_async(engine, corpus, picks, args, search_params)
+        return
     stream: list = [corpus[i] for i in picks]
     if args.dynamic:
         # interleave a churn burst mid-stream: new docs in, a few docs out,

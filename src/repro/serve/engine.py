@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import time
 import warnings
-from dataclasses import dataclass
+from dataclasses import dataclass, fields, replace
 
 import jax
 import jax.numpy as jnp
@@ -55,13 +55,77 @@ class ServeStats:
     plan_hits: int = 0
     plan_misses: int = 0
 
+    def snapshot(self) -> "ServeStats":
+        """An independent copy -- the window baseline the serving front
+        (`repro.router`) diffs against to attribute activity per replica
+        per measurement window."""
+        return replace(self)
+
+    def delta(self, baseline: "ServeStats") -> "ServeStats":
+        """Field-wise `self - baseline`: the activity since `baseline` was
+        snapshotted."""
+        return ServeStats(**{
+            f.name: getattr(self, f.name) - getattr(baseline, f.name)
+            for f in fields(self)
+        })
+
+    def reset(self) -> None:
+        """Zero every counter in place."""
+        for f in fields(self):
+            setattr(self, f.name, f.default)
+
+
+class PendingBatch:
+    """An in-flight micro-batch from `serve_batch_nowait`: embed + staged
+    search are dispatched (JAX async) but not blocked.  `result()` blocks,
+    finalizes the engine stats exactly once, and returns host arrays.  The
+    dispatch-to-result gap is where a caller overlaps work -- the serving
+    front's workers form and dispatch batch k+1 while batch k completes.
+
+    Stage attribution: called promptly (the router does), the embed/search
+    split matches `serve_batch`; a late `result()` shifts the idle wall
+    time into the stage sums, so callers that care about the split collect
+    promptly."""
+
+    def __init__(self, engine: "RetrievalEngine", q_emb, ids, dists,
+                 n_live: int, hit: bool, t0: float):
+        self._engine = engine
+        self._q_emb = q_emb
+        self._ids = ids
+        self._dists = dists
+        self._n_live = n_live
+        self._hit = hit
+        self._t0 = t0
+        self._out: tuple[np.ndarray, np.ndarray] | None = None
+
+    def result(self) -> tuple[np.ndarray, np.ndarray]:
+        if self._out is not None:
+            return self._out
+        jax.block_until_ready(self._q_emb)
+        t1 = time.perf_counter()
+        jax.block_until_ready(self._dists)
+        t2 = time.perf_counter()
+        s = self._engine.stats
+        s.requests += self._n_live
+        s.batches += 1
+        s.embed_s += t1 - self._t0
+        s.search_s += max(t2 - t1, 0.0)
+        s.plan_hits += int(self._hit)
+        s.plan_misses += int(not self._hit)
+        self._out = (np.asarray(self._ids), np.asarray(self._dists))
+        return self._out
+
 
 class RetrievalEngine:
     def __init__(self, cfg, params, *, m: int = 64, metric: str = "angular",
                  max_batch: int = 32,
                  search_params: SearchParams = DEFAULT_PARAMS,
-                 store: str = "fp32", shards: int | None = None):
+                 store: str = "fp32", shards: int | None = None,
+                 name: str | None = None):
         self.cfg = cfg
+        # `name` labels this engine's plan-cache activity (repro.exec scope
+        # attribution); the replica router names its engines replica-0..N
+        self.name = name
         self.params = params
         self.m = m
         self.metric = metric
@@ -173,7 +237,8 @@ class RetrievalEngine:
         # rewrite ("segmented"/"sharded") and caches the compiled pipeline.
         # return_hit attributes THIS call's cache outcome race-free (other
         # engines/threads may be compiling concurrently).
-        plan, hit = compile_plan(self.index, q_emb, p, return_hit=True)
+        plan, hit = compile_plan(self.index, q_emb, p, return_hit=True,
+                                 scope=self.name)
         ids, dists = plan.run(self.index, jnp.asarray(q_emb, jnp.float32))
         jax.block_until_ready(dists)
         t2 = time.perf_counter()
@@ -184,6 +249,26 @@ class RetrievalEngine:
         self.stats.plan_hits += int(hit)
         self.stats.plan_misses += int(not hit)
         return np.asarray(ids), np.asarray(dists)
+
+    def serve_batch_nowait(self, query_tokens: np.ndarray,
+                           params: SearchParams | None = None, *,
+                           n_live: int | None = None) -> PendingBatch:
+        """Non-blocking `serve_batch`: dispatch the embed and the staged
+        search without waiting for device work and return a `PendingBatch`;
+        stats (including the embed/search split and this call's plan-cache
+        outcome) land when its `result()` is called.  `n_live` is the
+        number of real requests when the caller padded the batch to a
+        bucketed shape (the router does), so `stats.requests` counts users,
+        not padding."""
+        assert self.index is not None, "build_index first"
+        p = self._resolve_params(params, {})
+        t0 = time.perf_counter()
+        q_emb = self.embed(query_tokens)
+        plan, hit = compile_plan(self.index, q_emb, p, return_hit=True,
+                                 scope=self.name)
+        ids, dists = plan.run(self.index, jnp.asarray(q_emb, jnp.float32))
+        n = query_tokens.shape[0] if n_live is None else n_live
+        return PendingBatch(self, q_emb, ids, dists, n, hit, t0)
 
     def serve_stream(self, requests: list,
                      params: SearchParams | None = None, **legacy):
@@ -219,8 +304,18 @@ class RetrievalEngine:
 
         for r in requests:
             if isinstance(r, tuple) and r and isinstance(r[0], str):
-                flush()  # queries queued before the update see the old corpus
                 op = r[0]
+                if op in ("insert", "delete", "compact") and not isinstance(
+                        self.index, SegmentedLCCSIndex):
+                    # fail before touching the index internals: a monolithic
+                    # or sharded layout has no update path at all
+                    raise ValueError(
+                        f"stream op {op!r} needs a dynamic corpus, but this "
+                        f"engine holds a static "
+                        f"{type(self.index).__name__}; build the index with "
+                        f"build_index(..., dynamic=True)"
+                    )
+                flush()  # queries queued before the update see the old corpus
                 if op == "insert":
                     results.append(("inserted", self.insert(r[1])))
                 elif op == "delete":

@@ -1,0 +1,301 @@
+"""Serving-front tests (repro.router): deadline-ordered batch formation,
+backpressure at the queue bound, drain-on-shutdown, least-depth dispatch,
+and the no-silent-retrace guarantee across replicas.
+
+Unit tests drive the admission queue and router against a stub engine (the
+router is duck-typed over the engine protocol precisely so queue semantics
+are testable without a backbone); the retrace test uses real engines."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.router import AdmissionQueue, QueueFull, Request, Router, Ticket
+from repro.serve.engine import ServeStats
+
+# queue bugs manifest as hangs, not failures: with pytest-timeout installed
+# (dev deps / CI) each test gets a watchdog instead of stalling the job
+pytestmark = pytest.mark.timeout(120)
+
+
+def _offer(q: AdmissionQueue, deadline: float, length: int = 16) -> Ticket:
+    now = time.perf_counter()
+    t = Ticket(deadline, now, q.name)
+    q.offer(Request(np.full(length, length, dtype=np.int32), deadline, now, t))
+    return t
+
+
+class StubPending:
+    def __init__(self, fn):
+        self._fn = fn
+
+    def result(self):
+        return self._fn()
+
+
+class StubEngine:
+    """Engine-protocol stub: instant (or gated/delayed) answers, real
+    ServeStats accounting."""
+
+    def __init__(self, max_batch=4, delay=0.0, gate=None, name="stub"):
+        self.max_batch = max_batch
+        self.delay = delay
+        self.gate = gate                      # threading.Event or None
+        self.entered = threading.Event()      # set when a batch is picked up
+        self.name = name
+        self.stats = ServeStats()
+        self.search_params = None
+        self.index = object()
+
+    def serve_batch_nowait(self, tokens, params=None, *, n_live=None):
+        self.entered.set()
+        if self.gate is not None:
+            self.gate.wait()
+        if self.delay:
+            time.sleep(self.delay)
+        n = tokens.shape[0]
+
+        def _finish():
+            self.stats.batches += 1
+            self.stats.requests += n if n_live is None else n_live
+            self.stats.plan_hits += 1
+            ids = np.tile(np.arange(5, dtype=np.int32), (n, 1))
+            return ids, np.zeros((n, 5), np.float32)
+
+        return StubPending(_finish)
+
+
+# ---------------------------------------------------------------------------
+# Admission queue
+# ---------------------------------------------------------------------------
+
+
+def test_batch_formation_is_deadline_ordered():
+    """EDF, not arrival order: the formed batch is sorted by deadline."""
+    q = AdmissionQueue(max_depth=16)
+    base = time.perf_counter() + 5.0
+    for off in (0.5, 0.1, 0.9, 0.3):
+        _offer(q, base + off)
+    batch = q.next_batch(4, linger_s=0.0)
+    assert [round(r.deadline - base, 1) for r in batch] == [0.1, 0.3, 0.5, 0.9]
+
+
+def test_batch_groups_by_token_shape():
+    """The batch takes the EDF head's shape; other lengths stay queued for
+    the next batch instead of truncating this one."""
+    q = AdmissionQueue(max_depth=16)
+    base = time.perf_counter() + 5.0
+    _offer(q, base + 0.3, length=16)
+    _offer(q, base + 0.1, length=32)   # earliest -> head shape is L=32
+    _offer(q, base + 0.4, length=16)
+    _offer(q, base + 0.2, length=32)
+    first = q.next_batch(4, linger_s=0.0)
+    assert [r.shape for r in first] == [(32,), (32,)]
+    second = q.next_batch(4, linger_s=0.0)
+    assert [r.shape for r in second] == [(16,), (16,)]
+    assert second[0].deadline < second[1].deadline
+
+
+def test_batch_closes_on_max_batch():
+    q = AdmissionQueue(max_depth=16)
+    base = time.perf_counter() + 5.0
+    for i in range(6):
+        _offer(q, base + i)
+    assert len(q.next_batch(4, linger_s=10.0)) == 4  # no linger when full
+    assert q.depth() == 2
+
+
+def test_deadline_timer_preempts_linger():
+    """A tight deadline closes the batch early: with one queued request due
+    almost immediately, next_batch must not sit out a long linger window."""
+    q = AdmissionQueue(max_depth=16)
+    _offer(q, time.perf_counter() + 0.02)
+    t0 = time.perf_counter()
+    batch = q.next_batch(8, linger_s=5.0)
+    assert len(batch) == 1
+    assert time.perf_counter() - t0 < 1.0
+
+def test_backpressure_rejects_with_retry_after():
+    q = AdmissionQueue(max_depth=3)
+    base = time.perf_counter() + 5.0
+    for i in range(3):
+        _offer(q, base + i)
+    with pytest.raises(QueueFull) as ei:
+        _offer(q, base + 9)
+    assert ei.value.depth == 3
+    assert ei.value.retry_after_s > 0
+    assert q.depth() == 3  # the rejected request was never queued
+
+
+def test_close_drains_then_yields_none():
+    q = AdmissionQueue(max_depth=16)
+    base = time.perf_counter() + 5.0
+    _offer(q, base)
+    q.close()
+    assert len(q.next_batch(4, linger_s=5.0)) == 1  # drain short-circuits
+    assert q.next_batch(4) is None
+    with pytest.raises(RuntimeError, match="closed"):
+        _offer(q, base)
+
+
+# ---------------------------------------------------------------------------
+# Router over stub engines
+# ---------------------------------------------------------------------------
+
+
+def test_router_serves_and_reports_window_stats():
+    router = Router([StubEngine(max_batch=4)], default_slo_ms=500.0,
+                    linger_ms=1.0)
+    tickets = [router.submit(np.zeros(16, np.int32)) for _ in range(10)]
+    outs = [t.result(timeout=30) for t in tickets]
+    router.drain(timeout_s=30)
+    assert all(ids.shape == (5,) for ids, _ in outs)
+    st = router.stats()
+    assert st.admitted == 10 and st.completed == 10 and st.rejected == 0
+    assert st.latency["count"] == 10 and st.latency["p99_ms"] > 0
+    assert sum(k * v for k, v in st.batch_size_hist.items()) == 10
+    assert st.replicas[0].serve["requests"] == 10  # n_live, not padding
+    router.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        router.submit(np.zeros(16, np.int32))
+
+
+def test_router_backpressure_at_depth_bound():
+    """With every worker wedged and all queues at the bound, submit()
+    rejects with a retry-after hint and counts the rejection."""
+    gate = threading.Event()
+    eng = StubEngine(max_batch=1, gate=gate)
+    router = Router([eng], max_depth=2, default_slo_ms=500.0, linger_ms=0.0)
+    try:
+        router.submit(np.zeros(16, np.int32))   # picked up, blocked on gate
+        assert eng.entered.wait(10)
+        deadline = time.perf_counter() + 10
+        admitted = 1
+        with pytest.raises(QueueFull) as ei:
+            # the worker may race one more request out of the queue; keep
+            # submitting until the depth bound genuinely rejects
+            while time.perf_counter() < deadline:
+                router.submit(np.zeros(16, np.int32))
+                admitted += 1
+        assert ei.value.retry_after_s > 0
+        assert router.stats().rejected == 1
+        assert router.stats().admitted == admitted
+    finally:
+        gate.set()
+        router.shutdown()
+
+
+def test_shutdown_drains_in_flight_requests():
+    """Queued-but-unserved requests are answered before workers exit."""
+    eng = StubEngine(max_batch=4, delay=0.01)
+    router = Router([eng], default_slo_ms=500.0, linger_ms=1.0)
+    tickets = [router.submit(np.zeros(16, np.int32)) for _ in range(12)]
+    router.shutdown(drain=True, timeout_s=30)
+    assert all(t.done() for t in tickets)
+    assert all(t.result()[0].shape == (5,) for t in tickets)
+    assert eng.stats.requests == 12
+
+
+def test_shutdown_without_drain_fails_queued_requests():
+    gate = threading.Event()
+    eng = StubEngine(max_batch=1, gate=gate)
+    router = Router([eng], max_depth=64, default_slo_ms=500.0, linger_ms=0.0)
+    tickets = [router.submit(np.zeros(16, np.int32)) for _ in range(6)]
+    assert eng.entered.wait(10)
+    threading.Timer(0.1, gate.set).start()  # un-wedge mid-shutdown
+    router.shutdown(drain=False, timeout_s=30)
+    states = []
+    for t in tickets:
+        try:
+            t.result(timeout=10)
+            states.append("served")
+        except RuntimeError:
+            states.append("failed")
+    # the in-flight request completes; everything still queued fails fast
+    assert states.count("served") >= 1
+    assert states.count("failed") >= 4
+
+
+def test_least_depth_dispatch_balances_replicas():
+    gate = threading.Event()
+    engines = [StubEngine(max_batch=1, gate=gate, name=f"s{i}")
+               for i in range(2)]
+    router = Router(engines, max_depth=64, default_slo_ms=500.0,
+                    linger_ms=0.0)
+    try:
+        for _ in range(10):
+            router.submit(np.zeros(16, np.int32))
+        depths = [r.queue.depth() for r in router.replicas]
+        # each worker holds at most 1 in flight; the rest must be spread
+        assert abs(depths[0] - depths[1]) <= 1, depths
+        assert sum(depths) >= 8
+    finally:
+        gate.set()
+        router.shutdown()
+
+
+def test_expired_deadline_is_served_and_counted():
+    """Late work is served, never dropped -- and the miss is visible."""
+    eng = StubEngine(max_batch=4, delay=0.05)
+    router = Router([eng], default_slo_ms=0.001, linger_ms=0.0)
+    t = router.submit(np.zeros(16, np.int32))
+    ids, _ = t.result(timeout=30)
+    router.drain(timeout_s=30)
+    assert ids.shape == (5,)
+    assert router.stats().deadline_misses == 1
+    router.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Real engines: warm handoff + no silent retrace
+# ---------------------------------------------------------------------------
+
+
+def test_replicas_never_retrace_in_steady_state():
+    """The acceptance property behind the whole layer: after warm(), a
+    steady-state run over 2 replicas shows a flat plan_misses on EVERY
+    replica (bucketed padding pins the batch shape; the shared cache makes
+    replica 1 hit plans replica 0 compiled), while plan_hits grow."""
+    import jax
+
+    from repro.configs import ARCHS
+    from repro.core import SearchParams
+    from repro.data.synthetic import lm_token_batches
+    from repro.exec import plan_cache
+    from repro.models import api
+    from repro.serve import RetrievalEngine
+
+    cfg = ARCHS["gemma-2b"].smoke()
+    params = api.init_model(jax.random.key(0), cfg)
+    engine = RetrievalEngine(cfg, params, m=16, metric="angular", max_batch=8,
+                             search_params=SearchParams(k=3, lam=16))
+    corpus, _ = lm_token_batches(vocab=cfg.vocab, seed=7)(0, 48, 16)
+    engine.build_index(corpus)
+
+    router = Router.replicate(engine, 2, default_slo_ms=2000.0, linger_ms=1.0)
+    try:
+        router.warm(corpus[:8])
+        assert router.ready()
+        st = router.stats()  # warm() reset the window: all deltas are zero
+        assert st.completed == 0
+        assert all(r.serve["plan_misses"] == 0 for r in st.replicas)
+
+        tickets = [router.submit(corpus[i % 48]) for i in range(32)]
+        outs = [t.result(timeout=120) for t in tickets]
+        router.drain(timeout_s=60)
+
+        hits = sum(int((i % 48) in outs[i][0]) for i in range(32))
+        assert hits >= 29, f"self-retrieval {hits}/32"
+        st = router.stats()
+        assert st.completed == 32
+        for r in st.replicas:
+            assert r.serve["plan_misses"] == 0, (
+                f"{r.name} retraced in steady state: {r.serve}")
+        served = [r for r in st.replicas if r.serve["batches"] > 0]
+        assert served and all(r.serve["plan_hits"] > 0 for r in served)
+        # per-replica attribution also lands in the plan cache's scope tally
+        scopes = plan_cache().stats()["scopes"]
+        assert "replica-0" in scopes and scopes["replica-0"]["hits"] > 0
+    finally:
+        router.shutdown()

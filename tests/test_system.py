@@ -188,8 +188,79 @@ def test_serve_stream_interleaves_corpus_updates():
     assert 35 in results[3][0]
     assert 2 not in q_deleted[0]  # tombstoned rows never surface
     assert 36 in q_after[0]
-    # a static engine refuses update ops
+    # a static engine refuses update ops up front (a clear ValueError naming
+    # the dynamic=True fix, not a failure deep in the index internals)
     static = RetrievalEngine(cfg, params, m=16, metric="angular")
     static.build_index(corpus[:8])
-    with pytest.raises(TypeError, match="dynamic=True"):
+    with pytest.raises(ValueError, match="dynamic=True"):
         static.serve_stream([("delete", [0])], p)
+
+
+def test_serve_stream_compact_on_static_index_raises():
+    """A ("compact",) stream op against a non-segmented index must fail
+    with a ValueError that names build_index(..., dynamic=True), before any
+    queued queries are flushed or index internals touched."""
+    cfg = ARCHS["gemma-2b"].smoke()
+    params = api.init_model(jax.random.key(0), cfg)
+    engine = RetrievalEngine(cfg, params, m=16, metric="angular", max_batch=4)
+    corpus, _ = lm_token_batches(vocab=cfg.vocab, seed=5)(0, 16, 16)
+    engine.build_index(corpus)  # monolithic: no update path
+    with pytest.raises(ValueError, match=r"dynamic=True"):
+        engine.serve_stream([corpus[0], ("compact",)], SearchParams(k=3, lam=16))
+    # nothing was served: the op was rejected before the flush
+    assert engine.stats.batches == 0 and engine.stats.compactions == 0
+    # unknown ops still get the dedicated message
+    with pytest.raises(ValueError, match="unknown stream op"):
+        engine.serve_stream([("vacuum",)], SearchParams(k=3, lam=16))
+
+
+def test_serve_stats_snapshot_reset_delta():
+    """ServeStats windowing hooks (the router's per-replica attribution):
+    snapshot() is an independent copy, delta() is field-wise subtraction,
+    reset() zeroes in place."""
+    from repro.serve.engine import ServeStats
+
+    s = ServeStats(requests=10, batches=3, embed_s=1.25, search_s=0.5,
+                   plan_hits=2, plan_misses=1)
+    snap = s.snapshot()
+    s.requests += 6
+    s.batches += 1
+    s.embed_s += 0.75
+    s.plan_hits += 4
+    assert snap.requests == 10 and snap.batches == 3  # unaffected copy
+    d = s.delta(snap)
+    assert (d.requests, d.batches, d.plan_hits, d.plan_misses) == (6, 1, 4, 0)
+    assert d.embed_s == pytest.approx(0.75) and d.search_s == 0.0
+    s.reset()
+    assert s == ServeStats()
+    assert snap.requests == 10  # reset is in place, snapshots survive
+
+
+def test_serve_batch_nowait_matches_serve_batch():
+    """The non-blocking batch entry point returns the same answers as
+    serve_batch and finalizes stats exactly once, on result()."""
+    cfg = ARCHS["gemma-2b"].smoke()
+    params = api.init_model(jax.random.key(0), cfg)
+    engine = RetrievalEngine(cfg, params, m=16, metric="angular", max_batch=8)
+    corpus, _ = lm_token_batches(vocab=cfg.vocab, seed=6)(0, 32, 16)
+    engine.build_index(corpus)
+    p = SearchParams(k=3, lam=16)
+
+    ids_sync, dists_sync = engine.serve_batch(corpus[:8], p)
+    before = engine.stats.snapshot()
+    pending = engine.serve_batch_nowait(corpus[:8], p)
+    assert engine.stats.batches == before.batches  # nothing landed yet
+    ids, dists = pending.result()
+    np.testing.assert_array_equal(ids, ids_sync)
+    np.testing.assert_allclose(dists, dists_sync, rtol=1e-6)
+    d = engine.stats.delta(before)
+    assert d.batches == 1 and d.requests == 8
+    assert d.plan_hits == 1 and d.plan_misses == 0  # same plan as the warmup
+    assert d.embed_s > 0.0 and d.search_s >= 0.0
+    ids2, _ = pending.result()  # idempotent: stats land exactly once
+    assert engine.stats.delta(before).batches == 1
+    np.testing.assert_array_equal(ids2, ids)
+    # padded bucketed serving: n_live attributes users, not padding rows
+    before = engine.stats.snapshot()
+    engine.serve_batch_nowait(corpus[:8], p, n_live=3).result()
+    assert engine.stats.delta(before).requests == 3
