@@ -20,8 +20,14 @@ Outputs (all int32):
   I (m, n): I[i] = argsort of shift-i strings            (paper's I_i)
   P (m, n): P[i, t] = position of string t in I[i]       (paper's N_{i-1})
   Hd (n, 2m): doubled hash matrix for O(1) circular slicing in the query phase.
+  L (m, n): adjacent-LCP table: L[i, p] = |lcp| of the sorted neighbours at
+            positions p and p+1 of I[i] (L[i, n-1] = 0).  Beyond-paper: powers
+            the fused probe kernel's O(1)-per-slot window LCPs via the classic
+            sorted-order identity lcp(a, c) = min(lcp(a, b), lcp(b, c)) for
+            a <= b <= c (DESIGN.md §3.1); the reference window path never
+            reads it.
 
-Space is O(nm), matching Theorem 3.1.
+Space is O(nm), matching Theorem 3.1 (L adds one more (m, n) table).
 """
 from __future__ import annotations
 
@@ -31,12 +37,17 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 
 class CSA(NamedTuple):
     I: jax.Array  # (m, n) int32  sorted order per shift
     P: jax.Array  # (m, n) int32  position of each string per shift
     Hd: jax.Array  # (n, 2m) int32 doubled hash strings
+    # (m, n) int32 adjacent-LCP per shift; None only for artifacts saved
+    # before the table existed (the fused probe kernel then falls back to
+    # the reference window path)
+    L: jax.Array | None = None
 
     @property
     def n(self) -> int:
@@ -98,7 +109,25 @@ def build_csa(h: jax.Array) -> CSA:
     pos = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (m, n))
     P = jnp.zeros((m, n), jnp.int32).at[jnp.arange(m)[:, None], I].set(pos)
     Hd = jnp.concatenate([h, h], axis=1).astype(jnp.int32)
-    return CSA(I=I, P=P, Hd=Hd)
+    L = _adjacent_lcp(Hd, I)
+    return CSA(I=I, P=P, Hd=Hd, L=L)
+
+
+def _adjacent_lcp(Hd: jax.Array, I: jax.Array) -> jax.Array:
+    """L[i, p] = |lcp| (capped at m) of the shift-i circular strings at sorted
+    positions p and p+1 of I[i]; L[i, n-1] = 0.  lax.map keeps the transient
+    at one (n, m) slab per shift instead of an (m, n, m) vmap blow-up."""
+    m, n = I.shape
+
+    def per_shift(args):
+        i, ord_i = args
+        a = lax.dynamic_slice(Hd[ord_i], (0, i), (n, m))  # sorted shift-i view
+        neq = a != jnp.roll(a, -1, axis=0)
+        any_neq = jnp.any(neq, axis=1)
+        lcp = jnp.where(any_neq, jnp.argmax(neq, axis=1), m).astype(jnp.int32)
+        return lcp.at[n - 1].set(0)  # roll wraps; last position has no successor
+
+    return lax.map(per_shift, (jnp.arange(m, dtype=jnp.int32), I))
 
 
 # ---------------------------------------------------------------------------

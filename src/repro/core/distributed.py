@@ -84,5 +84,10 @@ def distributed_query(
         metric=metric,
     )
     sharded = shard_index(mono, mesh, axis=axis)
-    params = SearchParams(k=k, lam=lam, source="bruteforce", metric=metric)
+    # the seed-era signature's `lam` is a *per-shard* budget; the sharded
+    # path apportions one global budget by row share (shard/search.py:
+    # _local_params), so the equivalent global budget is lam * n_shards
+    params = SearchParams(
+        k=k, lam=lam * sharded.shards, source="bruteforce", metric=metric
+    )
     return sharded.search(queries, params)

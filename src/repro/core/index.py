@@ -182,6 +182,8 @@ class LCCSIndex:
         tot = self.h.size * 4
         if self.csa is not None:
             tot += self.csa.I.size * 4 + self.csa.P.size * 4 + self.csa.Hd.size * 4
+            if self.csa.L is not None:
+                tot += self.csa.L.size * 4
         return tot
 
     def store_bytes(self) -> int:
@@ -274,7 +276,9 @@ class LCCSIndex:
             "tail_in_memory": self.tail is not None,
             "tail_path": self.tail_path,
             "h": np.asarray(self.h),
-            "csa": None if self.csa is None else [np.asarray(x) for x in self.csa],
+            "csa": None if self.csa is None else [
+                None if x is None else np.asarray(x) for x in self.csa
+            ],
             "metric": self.metric,
         }
         tmp = path.with_suffix(".tmp")
@@ -294,7 +298,9 @@ class LCCSIndex:
             for k, v in blob["family_fields"].items()
         }
         fam = cls(**fields)
-        csa = None if blob["csa"] is None else CSA(*[jnp.asarray(x) for x in blob["csa"]])
+        csa = None if blob["csa"] is None else CSA(
+            *[None if x is None else jnp.asarray(x) for x in blob["csa"]]
+        )
         if "store_kind" in blob:
             store_cls = get_store_cls(blob["store_kind"])
             vstore = store_cls(**{k: jnp.asarray(v)

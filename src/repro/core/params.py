@@ -62,6 +62,17 @@ use_gather_kernel
              dense jnp gather, None = the REPRO_GATHER_KERNEL env var when
              set, else on for TPU backends only (interpret-mode Pallas on CPU
              is correct but slow).
+use_probe_kernel
+             probe-stage kernel toggle (`kernels.csa_probe`): True = the
+             fused CSA probe (binary search + adjacent-LCP window walk +
+             scatter-max dedupe in one pass -- Pallas on TPU, the fused jnp
+             reference elsewhere), False = the legacy
+             `core.search.klccs_search*` window path, None = the
+             REPRO_PROBE_KERNEL env var when set, else on for TPU backends
+             only.  Outputs are bit-identical either way; the "lccs" and
+             "multiprobe-*" sources consult it on every topology.  Falls
+             back to the legacy path for mode="narrowed" and for CSAs saved
+             without the adjacent-LCP table.
 """
 from __future__ import annotations
 
@@ -135,6 +146,7 @@ class SearchParams:
     store: str | None = None
     rerank_mult: int = 4
     use_gather_kernel: bool | None = None
+    use_probe_kernel: bool | None = None
     shards: int | None = None
 
     def __post_init__(self):

@@ -46,9 +46,11 @@ def _lcp_and_less(row_d: jax.Array, qd: jax.Array, i: jax.Array, m: int):
 
 def _insertion_pos(csa: CSA, qd: jax.Array, i: jax.Array, lo0: jax.Array, hi0: jax.Array):
     """Lower-bound binary search: #strings (within [lo0, hi0)) whose shift-i
-    circular string sorts strictly before the query's.  Fixed log2(n)+1 steps."""
+    circular string sorts strictly before the query's.  Fixed bit_length(n)
+    steps: each step cuts the candidate interval to <= floor(len/2), so
+    floor(n / 2^steps) = 0 guarantees convergence from any [lo0, hi0)."""
     n, m = csa.n, csa.m
-    steps = max(1, (n - 1).bit_length() + 1)
+    steps = max(1, n.bit_length())
 
     def body(_, lohi):
         lo, hi = lohi

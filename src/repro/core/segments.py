@@ -236,6 +236,8 @@ class SegmentedLCCSIndex:
         tot = self.buf_h.size * 4
         for s in self.segments:
             tot += s.h.size * 4 + s.csa.I.size * 4 + s.csa.P.size * 4 + s.csa.Hd.size * 4
+            if s.csa.L is not None:
+                tot += s.csa.L.size * 4
         return tot
 
     def store_bytes(self) -> int:

@@ -95,6 +95,20 @@ def _require_csa(index, name):
         )
 
 
+def _fused_probe(index, params) -> bool:
+    """True when this probe runs the fused CSA kernel (`kernels.csa_probe`):
+    the resolved `use_probe_kernel` toggle is on AND the CSA carries the
+    adjacent-LCP table the fused window walk needs.  Bit-identical outputs
+    either way -- the toggle is purely a performance dispatch."""
+    from repro.exec.stages import resolve_use_probe_kernel  # lazy: no cycle
+    from repro.kernels.csa_probe import supports
+
+    return (
+        resolve_use_probe_kernel(params.use_probe_kernel)
+        and supports(index.csa)
+    )
+
+
 @register_source("bruteforce")
 def bruteforce_source(index, queries, qh, params):
     """Exact LCCS scoring of every database string (no CSA required)."""
@@ -105,8 +119,16 @@ def bruteforce_source(index, queries, qh, params):
 def lccs_source(index, queries, qh, params):
     """Single-probe lambda-LCCS search (paper Algorithm 2) over the CSA."""
     _require_csa(index, "lccs")
+    width = params.resolved_width()
+    if params.mode == "parallel" and _fused_probe(index, params):
+        from repro.kernels.csa_probe import csa_probe_search, default_use_pallas
+
+        return csa_probe_search(
+            index.csa, qh, params.lam, width=width,
+            use_pallas=default_use_pallas(),
+        )
     return klccs_search(
-        index.csa, qh, params.lam, width=params.resolved_width(), mode=params.mode
+        index.csa, qh, params.lam, width=width, mode=params.mode
     )
 
 
@@ -135,6 +157,24 @@ def multiprobe_full_source(index, queries, qh, params):
     width = params.resolved_width()
     strings, _, _ = _probe_batch(index, queries, qh, params)
     B, P, m = strings.shape
+    if params.mode == "parallel" and _fused_probe(index, params):
+        # fused: raw windows of every (probe, shift), ONE scatter-max dedupe
+        # per query over the whole P*m*2W pool.  Equals the legacy two-level
+        # (per-probe top-lam, then merged top-lam) dedupe exactly: any id cut
+        # by its best probe's inner top-lam is outranked by >= lam ids whose
+        # merged values only grow, so it cannot enter the global top-lam.
+        from repro.kernels.csa_probe import (
+            csa_probe_windows, dedupe_topk_scatter, default_use_pallas,
+        )
+
+        w_ids, w_lcps = csa_probe_windows(
+            index.csa, strings.reshape(B * P, m), width=width,
+            use_pallas=default_use_pallas(),
+        )
+        return dedupe_topk_scatter(
+            w_ids.reshape(B, -1), w_lcps.reshape(B, -1), index.csa.n,
+            params.lam,
+        )
     ids, lcps = klccs_search(
         index.csa, strings.reshape(B * P, m), params.lam, width=width,
         mode=params.mode,
@@ -159,20 +199,45 @@ def multiprobe_skip_source(index, queries, qh, params):
     if params.probes <= 1:
         return lccs_source(index, queries, qh, params)
     width = params.resolved_width()
-    base_ids, base_lcps, maxlen = klccs_search_with_lens(
-        index.csa, qh, params.lam, width=width
-    )
+    fused = _fused_probe(index, params)
+    if fused:
+        from repro.kernels.csa_probe import (
+            csa_probe_pairs, csa_probe_windows, dedupe_topk_scatter,
+            default_use_pallas,
+        )
+
+        use_pallas = default_use_pallas()
+        # raw base windows: the scatter-max merge below dedupes the whole
+        # pool at once, so no intermediate top-lam cut is needed (and the
+        # per-shift max of the window LCPs IS the §4.2 len bound)
+        w_ids, w_lcps = csa_probe_windows(
+            index.csa, qh, width=width, use_pallas=use_pallas
+        )
+        B0 = qh.shape[0]
+        base_ids = w_ids.reshape(B0, -1)
+        base_lcps = w_lcps.reshape(B0, -1)
+        maxlen = jnp.max(w_lcps, axis=2)
+    else:
+        base_ids, base_lcps, maxlen = klccs_search_with_lens(
+            index.csa, qh, params.lam, width=width
+        )
     strings, pos, mask = _probe_batch(index, queries, qh, params)
     B, P, m = strings.shape
     shifts_all = jnp.arange(m, dtype=jnp.int32)
-    # affected[b, p, i] <=> some modified position of probe p lies in shift i's
-    # base LCP window: (pos - i) mod m <= min(maxlen_i + 1, m - 1)
-    dist = (pos[:, :, :, None] - shifts_all[None, None, None, :]) % m  # (B,P,T,m)
+    # probe 0 is the unperturbed base query -- the full base search above
+    # already covered it, so the worklist ranges over probes 1..P-1 only
+    # (the old form kept P * budget rows and masked probe 0's, paying a dead
+    # budget x 2W slice of the pair search per query)
+    strings_p = strings[:, 1:, :]  # (B, P-1, m)
+    pos_p = pos[:, 1:, :]  # (B, P-1, T)
+    mask_p = jnp.asarray(mask)[1:]
+    # affected[b, p, i] <=> some modified position of probe p lies in shift
+    # i's base LCP window: (pos - i) mod m <= min(maxlen_i + 1, m - 1)
+    dist = (pos_p[:, :, :, None] - shifts_all[None, None, None, :]) % m
     window = jnp.minimum(maxlen + 1, m - 1)  # (B, m)
     affected = (
-        (dist <= window[:, None, None, :]) & jnp.asarray(mask)[None, :, :, None]
-    ).any(axis=2)  # (B, P, m)
-    affected = affected.at[:, 0, :].set(False)  # probe 0 == base query
+        (dist <= window[:, None, None, :]) & mask_p[None, :, :, None]
+    ).any(axis=2)  # (B, P-1, m)
     if params.skip_budget is None:
         # heuristic static cap: each of the <= T modified positions of a probe
         # affects a window of maxlen_i + 1 shifts, and base LCP maxima are
@@ -185,15 +250,23 @@ def multiprobe_skip_source(index, queries, qh, params):
         budget = min(params.skip_budget, m)
     # rank affected shifts by their base LCP window: shifts that already match
     # long prefixes are where a probe can newly extend a co-substring
-    score = jnp.where(affected, window[:, None, :] + 1, 0)  # (B, P, m)
-    hit, shifts = jax.lax.top_k(score, budget)  # (B, P, S)
+    score = jnp.where(affected, window[:, None, :] + 1, 0)  # (B, P-1, m)
+    hit, shifts = jax.lax.top_k(score, budget)  # (B, P-1, S)
     valid = hit > 0
     rows = jnp.broadcast_to(
-        strings[:, :, None, :], (B, P, budget, m)
+        strings_p[:, :, None, :], (B, P - 1, budget, m)
     ).reshape(-1, m)
-    p_ids, p_lcps = klccs_search_pairs(
-        index.csa, rows, shifts.reshape(-1), valid.reshape(-1), width=width
-    )
+    if fused:
+        p_ids, p_lcps = csa_probe_pairs(
+            index.csa, rows, shifts.reshape(-1), valid.reshape(-1),
+            width=width, use_pallas=use_pallas,
+        )
+    else:
+        p_ids, p_lcps = klccs_search_pairs(
+            index.csa, rows, shifts.reshape(-1), valid.reshape(-1), width=width
+        )
     ids = jnp.concatenate([base_ids, p_ids.reshape(B, -1)], axis=1)
     lcps = jnp.concatenate([base_lcps, p_lcps.reshape(B, -1)], axis=1)
+    if fused:
+        return dedupe_topk_scatter(ids, lcps, index.csa.n, params.lam)
     return jax.vmap(lambda i, l: dedupe_topk(i, l, params.lam))(ids, lcps)

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 # submodules are guaranteed loaded by call time, never at import time.
 
 ENV_GATHER_KERNEL = "REPRO_GATHER_KERNEL"
+ENV_PROBE_KERNEL = "REPRO_PROBE_KERNEL"
 
 
 # ---------------------------------------------------------------------------
@@ -91,6 +92,22 @@ def resolve_use_kernel(flag: bool | None) -> bool:
     if flag is not None:
         return bool(flag)
     env = os.environ.get(ENV_GATHER_KERNEL)
+    if env is not None:
+        return env.strip().lower() not in ("", "0", "false", "off")
+    return jax.default_backend() == "tpu"
+
+
+def resolve_use_probe_kernel(flag: bool | None) -> bool:
+    """Tri-state resolution of `SearchParams.use_probe_kernel` -- the probe
+    stage's dispatch between the fused CSA probe (`kernels.csa_probe`) and
+    the legacy `core.search` window path.  Same contract as
+    `resolve_use_kernel`: plan building pins None to a concrete bool before
+    jitting so the choice keys the plan; direct callers passing None get
+    trace-time resolution (a later env flip cannot invalidate a cached
+    executable)."""
+    if flag is not None:
+        return bool(flag)
+    env = os.environ.get(ENV_PROBE_KERNEL)
     if env is not None:
         return env.strip().lower() not in ("", "0", "false", "off")
     return jax.default_backend() == "tpu"

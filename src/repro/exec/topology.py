@@ -78,6 +78,11 @@ def _resolve_common(index, p: SearchParams) -> SearchParams:
     if p.use_gather_kernel is None:
         with _suppress_width_warning():
             p = p.replace(use_gather_kernel=stages.resolve_use_kernel(None))
+    if p.use_probe_kernel is None:
+        with _suppress_width_warning():
+            p = p.replace(
+                use_probe_kernel=stages.resolve_use_probe_kernel(None)
+            )
     # host-side early validation: same error the verify stage raises at
     # trace time, surfaced before any compilation work
     stages.check_store_kind(index.store, p)

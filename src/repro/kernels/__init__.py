@@ -9,8 +9,14 @@ from .hash_rp.ops import hash_rp
 from .hash_xp.ops import hash_xp
 from .gather_l2.ops import gather_dist
 from .gather_q.ops import gather_dist_q
+from .csa_probe.ops import (
+    csa_probe_pairs,
+    csa_probe_search,
+    csa_probe_search_with_lens,
+)
 from .flash_attn.ops import flash_attention
 from .ssm_scan.ops import ssm_scan
 
 __all__ = ["circrun", "hash_rp", "hash_xp", "gather_dist", "gather_dist_q",
+           "csa_probe_pairs", "csa_probe_search", "csa_probe_search_with_lens",
            "flash_attention", "ssm_scan"]

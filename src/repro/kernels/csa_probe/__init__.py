@@ -1,0 +1,19 @@
+from .ops import (
+    csa_probe_pairs,
+    csa_probe_search,
+    csa_probe_search_with_lens,
+    csa_probe_windows,
+    default_use_pallas,
+    supports,
+)
+from .ref import dedupe_topk_scatter
+
+__all__ = [
+    "csa_probe_pairs",
+    "csa_probe_search",
+    "csa_probe_search_with_lens",
+    "csa_probe_windows",
+    "dedupe_topk_scatter",
+    "default_use_pallas",
+    "supports",
+]

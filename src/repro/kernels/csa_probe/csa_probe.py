@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: the fused CSA probe stage.
+
+One grid step = one (probe string, shift) worklist row -- the single-shift
+granularity every candidate source reduces to (full k-LCCS search is the
+worklist {(q, 0..m-1)}; the §4.2 skip source feeds its compacted pair list
+directly).  Per step the kernel runs the whole probe pipeline in VMEM:
+
+  1. lower-bound binary search over the shift's sorted order I_i,
+  2. two boundary LCPs against the doubled hash matrix Hd,
+  3. the width-W window walk as a running min over the adjacent-LCP table L
+     (see kernels/csa_probe/ref.py for the identity; DESIGN.md §3.1).
+
+The CSA rows are *scalar-prefetched* the way `gather_q` prefetches candidate
+ids: the worklist's shift array is prefetched to SMEM and the BlockSpec
+index_maps use it to DMA exactly one I row + one L row per step (and the
+query index array picks the probe string row), double-buffered by the Pallas
+pipeline.  Hd stays VMEM-resident for the data-dependent binary-search row
+probes -- n * 2m * 4 bytes, which bounds the kernel at roughly n <= 30k for
+m = 64 on a 16 MB-VMEM TPU core; larger corpora use the reference fused path
+(`ref.py`, identical outputs) or shard first.
+
+Grid (R,): R worklist rows.  Outputs ids/lcps (R, 2W) int32, -1-free (the
+caller masks invalid rows).  Interpret mode makes this exact on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _probe_kernel(s_ref, q_ref, qd_ref, I_ref, L_ref, Hd_ref, ids_ref,
+                  lcps_ref, *, width: int, n: int, m: int):
+    del q_ref  # consumed by the qd index_map
+    r = pl.program_id(0)
+    i = s_ref[r]
+    qv = lax.dynamic_slice(qd_ref[...], (0, i), (1, m))  # (1, m) shift-i query
+    Irow = I_ref[...]  # (1, n) sorted order of shift i
+    Lrow = L_ref[...]  # (1, n) adjacent LCPs of shift i
+    Hd = Hd_ref[...]  # (n, 2m) doubled hash matrix (VMEM resident)
+
+    def lcp_less(t):
+        """(lcp, less) of data row t's shift-i string vs the query's."""
+        row = lax.dynamic_slice(Hd, (t, i), (1, m))
+        neq = row != qv
+        any_neq = jnp.any(neq)
+        f = jnp.argmax(neq, axis=1)[0]
+        lcp = jnp.where(any_neq, f, m).astype(jnp.int32)
+        less = any_neq & (row[0, f] < qv[0, f])
+        return lcp, less
+
+    # 1. lower-bound binary search (fixed bit_length(n) steps, as core.search)
+    steps = max(1, n.bit_length())
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        t = Irow[0, jnp.clip(mid, 0, n - 1)]
+        _, less = lcp_less(t)
+        take = (mid < hi) & less
+        return jnp.where(take, mid + 1, lo), jnp.where(take, hi, jnp.minimum(hi, mid))
+
+    pos, _ = lax.fori_loop(0, steps, body, (jnp.int32(0), jnp.int32(n)))
+
+    # 2. boundary LCPs -- the only full string comparisons of the window
+    lcp_l, _ = lcp_less(Irow[0, jnp.clip(pos - 1, 0, n - 1)])
+    lcp_u, _ = lcp_less(Irow[0, jnp.clip(pos, 0, n - 1)])
+
+    # 3. window walk: running min over L away from the insertion point
+    jj = lax.broadcasted_iota(jnp.int32, (1, width), 1)
+    adj_down = jnp.where(
+        pos - 2 - jj >= 0, jnp.take(Lrow[0], jnp.clip(pos - 2 - jj, 0, n - 1)), m
+    )
+    adj_up = jnp.where(
+        pos + jj <= n - 2, jnp.take(Lrow[0], jnp.clip(pos + jj, 0, n - 1)), m
+    )
+    shift1 = lambda c: jnp.concatenate(
+        [jnp.full((1, 1), m, jnp.int32), c[:, :-1]], axis=1
+    )
+    down = jnp.minimum(lcp_l, shift1(lax.associative_scan(jnp.minimum, adj_down, axis=1)))
+    up = jnp.minimum(lcp_u, shift1(lax.associative_scan(jnp.minimum, adj_up, axis=1)))
+
+    offs = lax.broadcasted_iota(jnp.int32, (1, 2 * width), 1) - width
+    ps = jnp.clip(pos + offs, 0, n - 1)
+    ids_ref[...] = jnp.take(Irow[0], ps)
+    lcps_ref[...] = jnp.where(
+        ps >= pos,
+        jnp.take(up[0], jnp.clip(ps - pos, 0, width - 1)),
+        jnp.take(down[0], jnp.clip(pos - 1 - ps, 0, width - 1)),
+    ).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def csa_probe_pallas(
+    I: jax.Array,  # (m, n) int32 sorted orders
+    L: jax.Array,  # (m, n) int32 adjacent LCPs
+    Hd: jax.Array,  # (n, 2m) int32 doubled hash strings
+    qd: jax.Array,  # (B, 2m) int32 doubled probe strings
+    shifts: jax.Array,  # (R,) int32 shift per worklist row
+    qidx: jax.Array,  # (R,) int32 probe-string row per worklist row
+    *,
+    width: int,
+    interpret: bool = True,
+):
+    """Fused probe over an (R,) worklist: returns (ids (R, 2W), lcps (R, 2W)).
+    Row r searches shift `shifts[r]` for probe string `qd[qidx[r]]`."""
+    m, n = I.shape
+    R = shifts.shape[0]
+    kern = functools.partial(_probe_kernel, width=width, n=n, m=m)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(R,),
+            in_specs=[
+                pl.BlockSpec((1, 2 * m), lambda r, s_ref, q_ref: (q_ref[r], 0)),
+                pl.BlockSpec((1, n), lambda r, s_ref, q_ref: (s_ref[r], 0)),
+                pl.BlockSpec((1, n), lambda r, s_ref, q_ref: (s_ref[r], 0)),
+                pl.BlockSpec((n, 2 * m), lambda r, s_ref, q_ref: (0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 2 * width), lambda r, s_ref, q_ref: (r, 0)),
+                pl.BlockSpec((1, 2 * width), lambda r, s_ref, q_ref: (r, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((R, 2 * width), jnp.int32),
+            jax.ShapeDtypeStruct((R, 2 * width), jnp.int32),
+        ],
+        interpret=interpret,
+    )(shifts.astype(jnp.int32), qidx.astype(jnp.int32), qd, I, L, Hd)

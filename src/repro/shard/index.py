@@ -168,6 +168,8 @@ class ShardedLCCSIndex:
         tot = self.h.size * 4
         if self.csa is not None:
             tot += (self.csa.I.size + self.csa.P.size + self.csa.Hd.size) * 4
+            if self.csa.L is not None:
+                tot += self.csa.L.size * 4
         return tot
 
     def store_bytes(self) -> int:

@@ -4,7 +4,11 @@ by an all_gather + the shared global top-k merge.
 Every shard runs the SAME staged pipeline a monolithic `LCCSIndex` runs over
 its local rows -- the registered candidate source named by ``params.inner``
 (``params.source`` is "sharded"), then the `repro.exec.stages` verification
-over the shard's own `VectorStore` slice:
+over the shard's own `VectorStore` slice.  The probe/verify budget is
+*apportioned*: each shard runs its source with lam_local = ceil(lam / S)
+(and a ceil(W / S) window when the width is derived -- see `_local_params`),
+so S shards together spend the monolithic candidate budget rather than S
+times it.  The verification stages then split:
 
   exact stores   `stages.exact_topk` per shard (global ids reported) ->
                  all_gather (B, S*k) -> `stages.merge_topk`.  Identical to
@@ -47,7 +51,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.csa import CSA
 from repro.core.index import LCCSIndex
-from repro.core.params import SearchParams
+from repro.core.params import SearchParams, _suppress_width_warning
 from repro.core.sources import get_source, register_source
 from repro.exec import execute as _execute, register_topology, stages
 
@@ -58,6 +62,32 @@ def _inner_name(params: SearchParams) -> str:
     return params.inner if params.source == "sharded" else params.source
 
 
+def _local_params(params: SearchParams, shards: int) -> SearchParams:
+    """Apportion the per-shard probe budget by the shard's row share.
+
+    Each shard holds ~1/S of the rows, so its local candidate cut (and hence
+    the all_gather payload of the "sharded" source) is top-ceil(lam/S), not
+    top-lam: the total candidate budget across shards equals the monolithic
+    lam instead of S x lam.  When the window width is derived (width=None),
+    the per-shard k-LCCS window likewise shrinks to ceil(W/S), keeping the
+    total probe bandwidth at 2W sorted positions per shift.  Without this the
+    per-shard probe + verify cost is *constant* in S -- S shards do S x the
+    monolithic work and fig13's sharded throughput regresses below 1 shard.
+
+    Exactness guarantees survive apportioning: complete coverage lam >= n
+    implies ceil(lam/S) >= ceil(n/S) >= every padded shard's row count, and
+    an *explicit* width is honoured unscaled (so lam >= n plus width >= n
+    still makes every shard's candidate set complete).  The floor keeps
+    lam_local >= k so each shard can always fill the merge's k slots."""
+    if shards <= 1:
+        return params
+    lam_l = max(params.k, -(-params.lam // shards))
+    with _suppress_width_warning():  # derived copy: user params already warned
+        width_l = (params.width if params.width is not None
+                   else max(4, -(-params.resolved_width() // shards)))
+        return params.replace(lam=lam_l, width=width_l)
+
+
 def _local_view(family, store, h, csa, gid, tail, metric):
     """Rebuild a plain LCCSIndex over one shard's rows from the size-1
     leading-axis blocks shard_map hands the local function."""
@@ -66,7 +96,9 @@ def _local_view(family, store, h, csa, gid, tail, metric):
         family=family,
         store=sq(store),
         h=h[0],
-        csa=None if csa is None else CSA(*(x[0] for x in csa)),
+        csa=None if csa is None else CSA(
+            *(None if x is None else x[0] for x in csa)
+        ),
         metric=metric,
         tail=None if tail is None else tail[0],
     )
@@ -104,9 +136,10 @@ def _shard_call(index: ShardedLCCSIndex, local_fn, out_specs):
 
 
 def _local_search(family, store, h, csa, gid, tail, queries, qh,
-                  *, params, metric, axis):
+                  *, params, metric, axis, shards):
     view, gid_l = _local_view(family, store, h, csa, gid, tail, metric)
-    ids_l, _ = get_source(_inner_name(params))(view, queries, qh, params)
+    p_l = _local_params(params, shards)  # per-shard budget share
+    ids_l, _ = get_source(_inner_name(p_l))(view, queries, qh, p_l)
     g = stages.local_to_global(ids_l, gid_l)
     ids_l = jnp.where(g >= 0, ids_l, -1)  # mask padded rows before gathers
     use_kernel = stages.resolve_use_kernel(params.use_gather_kernel)
@@ -121,9 +154,11 @@ def _local_search(family, store, h, csa, gid, tail, queries, qh,
         all_d = jax.lax.all_gather(d_k, axis, axis=1).reshape(B, -1)
         return stages.merge_topk(all_d, all_ids, params.k)
 
-    # two-stage: per-shard stage-1 scan, merged exact rerank
+    # two-stage: per-shard stage-1 scan (local budget), merged exact rerank
+    # (the merge stages keep the GLOBAL params: cut_survivors reproduces the
+    # monolithic min(k*rerank_mult, lam) stage-1 survivor set)
     surv_l, approx = stages.survivors(view.store, queries, ids_l,
-                                      params, metric)
+                                      p_l, metric)
     g_surv = stages.local_to_global(surv_l, gid_l)
     rows_f = stages.gather_fp32(view.store, view.tail, surv_l)  # (B, R, d)
     all_ids = jax.lax.all_gather(g_surv, axis, axis=1).reshape(B, -1)
@@ -147,7 +182,8 @@ def _search_impl(index: ShardedLCCSIndex, queries: jax.Array,
     metric = params.metric or index.metric
     fn = _shard_call(
         index,
-        partial(_local_search, params=params, metric=metric, axis=index.axis),
+        partial(_local_search, params=params, metric=metric, axis=index.axis,
+                shards=index.shards),
         out_specs=(P(), P()),
     )
     return fn(index.family, index.store, index.h, index.csa, index.gid,
@@ -192,6 +228,10 @@ def _sharded_resolve(index, p: SearchParams) -> SearchParams:
             p = p.replace(source="sharded", inner=p.source)
         if p.use_gather_kernel is None:  # concrete bool -> plan key
             p = p.replace(use_gather_kernel=stages.resolve_use_kernel(None))
+        if p.use_probe_kernel is None:
+            p = p.replace(
+                use_probe_kernel=stages.resolve_use_probe_kernel(None)
+            )
     if p.shards is not None and p.shards != index.shards:
         raise ValueError(
             f"SearchParams(shards={p.shards}) does not match this index's "
@@ -228,7 +268,10 @@ def sharded_source(index, queries, qh, params):
     def local(family, store, h, csa, gid, tail, queries_l, qh_l):
         view, gid_l = _local_view(family, store, h, csa, gid, tail,
                                   params.metric or index.metric)
-        ids_l, lcps = get_source(params.inner)(view, queries_l, qh_l, params)
+        # local budget share: the all_gather below ships (B, ceil(lam/S))
+        # per shard -- the merged pool is ~lam candidates total, not S*lam
+        p_l = _local_params(params, index.shards)
+        ids_l, lcps = get_source(p_l.inner)(view, queries_l, qh_l, p_l)
         g = stages.local_to_global(ids_l, gid_l)
         lcps = jnp.where(g >= 0, lcps, -1)
         B = queries_l.shape[0]
