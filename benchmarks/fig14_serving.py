@@ -51,6 +51,12 @@ the fig12/fig13 sweeps the harness process carries enough allocator/cache
 state that open-loop timings degrade badly.  Like fig13, `run` therefore
 re-invokes this module as a fresh subprocess and parses one JSON line back;
 the records land in BENCH_search.json under "serving" (see run.py).
+
+Per-window numbers (latency percentiles, deadline misses, batch-size
+histogram) are read off the `repro.obs` registry via snapshot/delta -- the
+same series a Prometheus scrape exports -- rather than hand-rolled dict
+plumbing.  `router.stats()` remains the source for per-replica plan-miss
+attribution (the no-silent-retrace check needs per-engine deltas).
 """
 from __future__ import annotations
 
@@ -202,6 +208,9 @@ def run(csv: CsvRows, *, corpus_docs: int = 160, max_batch: int = 8,
 
 def _worker(*, corpus_docs: int, max_batch: int, n_bursts: int, burst: int,
             period_s: float, levels, sweep_cap: int) -> dict:
+    from collections import Counter as _TallyCounter
+
+    from repro.obs.registry import registry
     from repro.router import Router, percentiles_ms
     from repro.router.router import _pad_rows
 
@@ -260,11 +269,16 @@ def _worker(*, corpus_docs: int, max_batch: int, n_bursts: int, burst: int,
                               default_slo_ms=slo_ms, max_depth=1024)
     try:
         router.warm([pool16[0], pool32[0]])
+        # measurement window = one registry snapshot/delta: the same series
+        # a Prometheus scrape would export, no hand-rolled dict plumbing
+        snap = registry().snapshot()
         rej, _ = _run_async(router, sched, slo_ms)
-        st = router.stats()
+        d = registry().since(snap)
     finally:
         router.shutdown()
-    async_pct = st.latency
+    async_pct = percentiles_ms(d.samples("repro_router_latency_seconds"))
+    batch_hist = dict(sorted(_TallyCounter(
+        int(b) for b in d.samples("repro_router_batch_size")).items()))
     bursty = {
         "offered_qps": round(offered_qps, 1),
         "bursts": n_bursts, "burst": burst, "period_s": period_s,
@@ -272,9 +286,10 @@ def _worker(*, corpus_docs: int, max_batch: int, n_bursts: int, burst: int,
                  "batches": int(sync_batches)},
         "async": {"p50_ms": async_pct["p50_ms"],
                   "p99_ms": async_pct["p99_ms"],
-                  "batches": sum(st.batch_size_hist.values()),
-                  "batch_size_hist": st.batch_size_hist,
-                  "deadline_misses": st.deadline_misses,
+                  "batches": sum(batch_hist.values()),
+                  "batch_size_hist": batch_hist,
+                  "deadline_misses": int(
+                      d.value("repro_router_deadline_misses_total")),
                   "rejected": rej},
         "async_beats_sync_p99": async_pct["p99_ms"] < sync_pct["p99_ms"],
     }
@@ -307,16 +322,24 @@ def _worker(*, corpus_docs: int, max_batch: int, n_bursts: int, burst: int,
                 router.warm([pool32[0]])
                 for _ in range(trials):
                     sched = _poisson_schedule(rate, n_req, pool32, rng)
+                    # reset_window still re-baselines the per-replica
+                    # ServeStats (plan-miss attribution below); the SLO
+                    # numbers themselves come off the registry delta
                     router.reset_window()
+                    snap = registry().snapshot()
                     rej, wall = _run_async(router, sched, slo_ms)
+                    d = registry().since(snap)
                     st = router.stats()
                     rep_misses = [r.serve["plan_misses"]
                                   for r in st.replicas]
                     misses_flat &= all(m == 0 for m in rep_misses)
-                    p99s.append(st.latency["p99_ms"])
-                    p50s.append(st.latency["p50_ms"])
+                    pct = percentiles_ms(
+                        d.samples("repro_router_latency_seconds"))
+                    p99s.append(pct["p99_ms"])
+                    p50s.append(pct["p50_ms"])
                     rejs += rej
-                    misses += st.deadline_misses
+                    misses += int(
+                        d.value("repro_router_deadline_misses_total"))
             finally:
                 router.shutdown()
             sustained = (all(p is not None and p <= slo_ms for p in p99s)

@@ -7,7 +7,8 @@ machine-readably.
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--smoke]
   --quick  halve the dataset sizes
   --smoke  fig12 (store sweep) + fig13 (sharded scaling) + fig14 (serving
-           front) only, tiny n -- the CI gate; still emits BENCH_search.json
+           front) + stage breakdown (instrumented plans + BENCH_trace.json)
+           only, tiny n -- the CI gate; still emits BENCH_search.json
 """
 from __future__ import annotations
 
@@ -45,7 +46,7 @@ def main() -> None:
     n = 4000 if quick else 8000
     csv = CsvRows()
     t0 = time.time()
-    from . import fig12_memory, fig13_sharded, fig14_serving
+    from . import fig12_memory, fig13_sharded, fig14_serving, stage_breakdown
 
     if smoke:
         print("# fig12 (smoke): recall vs store bytes / QPS per store", flush=True)
@@ -59,6 +60,10 @@ def main() -> None:
         search_perf["serving"] = fig14_serving.run(
             csv, corpus_docs=128, max_batch=8,
             n_bursts=4, burst=20, period_s=0.7, sweep_cap=800
+        )
+        print("# trace (smoke): per-stage breakdown + Chrome trace", flush=True)
+        search_perf["stage_breakdown"] = stage_breakdown.run(
+            csv, n=1000, queries=32, repeats=3
         )
         search_perf["wall_s"] = time.time() - t0
         search_perf["mode"] = "smoke"
@@ -90,6 +95,8 @@ def main() -> None:
     )
     print("# fig14: serving front -- bursty p99 + replica SLO sweep", flush=True)
     search_perf["serving"] = fig14_serving.run(csv)
+    print("# trace: per-stage breakdown + Chrome trace", flush=True)
+    search_perf["stage_breakdown"] = stage_breakdown.run(csv)
     print("# table1: complexity scaling in n", flush=True)
     table1_scaling.run(csv)
     print("# kernels", flush=True)

@@ -55,6 +55,23 @@ import jax.numpy as jnp
 ENV_GATHER_KERNEL = "REPRO_GATHER_KERNEL"
 ENV_PROBE_KERNEL = "REPRO_PROBE_KERNEL"
 
+# The canonical stage vocabulary: instrumented plans (repro.exec.plan with
+# instrument=True) label `repro_exec_stage_seconds{stage=...}` and their
+# trace spans (`exec.<stage>`) from exactly this set, so dashboards and the
+# bench stage-breakdown report never see ad-hoc names.  Which subset appears
+# depends on the plan shape: exact stores verify as gather+merge, quantized
+# ones as survivors+gather+rerank, the sharded topology adds verify+merge.
+STAGE_NAMES = (
+    "hash_queries",  # query vectors -> hash strings
+    "probe",         # candidate generation (CSA probe / source dispatch)
+    "survivors",     # stage-1 approximate cut (quantized stores)
+    "gather",        # row/distance gather (device or host memmap)
+    "rerank",        # exact fp32 rerank of gathered rows
+    "verify",        # fused per-shard verification (sharded topology)
+    "merge",         # final top-k merge
+    "search",        # whole-plan fallback for adapters without staging
+)
+
 
 # ---------------------------------------------------------------------------
 # embed/hash + probe

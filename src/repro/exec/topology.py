@@ -20,10 +20,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.params import SearchParams, _suppress_width_warning
+from repro.obs.trace import stage as _obs_stage
 from repro.store import tail as tail_mod
 
 from . import stages
-from .plan import register_topology
+from .plan import register_topology, topology_of
 
 
 # ---------------------------------------------------------------------------
@@ -109,6 +110,104 @@ def _monolithic_build(index, p: SearchParams):
     return run
 
 
+# -- instrumented (staged) variant -----------------------------------------
+#
+# The same arithmetic as `_monolithic_build`, but each pipeline stage is its
+# own jit with a `block_until_ready` fence inside an `obs.stage` timer, so
+# `repro_exec_stage_seconds{topology,stage}` sees device-inclusive per-stage
+# walls.  Compiled separately and keyed distinctly in the plan cache
+# (`compile_plan(..., instrument=True)`): the fused fast path is untouched.
+
+
+def _probe_ids(index, queries, qh, *, params):
+    cand_ids, _ = stages.probe(index, queries, qh, params)
+    return cand_ids
+
+
+def _exact_dists(index, queries, cand_ids, *, metric, use_kernel):
+    return index.store.gather_dist(cand_ids, queries, metric=metric,
+                                   use_kernel=use_kernel)
+
+
+def _survivors_stage(index, queries, cand_ids, *, params, metric):
+    return stages.survivors(index.store, queries, cand_ids, params, metric)
+
+
+def _survivor_ids(index, queries, cand_ids, *, params, metric):
+    surv, _ = stages.survivors(index.store, queries, cand_ids, params, metric)
+    return surv
+
+
+def _gather_rows(index, surv_ids):
+    return stages.gather_fp32(index.store, index.tail, surv_ids)
+
+
+def _monolithic_build_instrumented(index, p: SearchParams):
+    topo = topology_of(index)
+    metric = p.metric or index.metric
+    use_k = stages.resolve_use_kernel(p.use_gather_kernel)
+    block = jax.block_until_ready
+    hash_j = jax.jit(stages.hash_queries)
+    probe_j = jax.jit(partial(_probe_ids, params=p))
+
+    if has_disk_tail(index):
+        surv_j = jax.jit(partial(_survivor_ids, params=p, metric=metric))
+
+        def run(idx, queries):
+            with _obs_stage(topo, "hash_queries"):
+                qh = block(hash_j(idx.family, queries))
+            with _obs_stage(topo, "probe"):
+                cand = block(probe_j(idx, queries, qh))
+            with _obs_stage(topo, "survivors"):
+                surv = block(surv_j(idx, queries, cand))
+            with _obs_stage(topo, "gather"):  # host memmap gather
+                rows = block(jnp.asarray(tail_mod.gather_tail(idx.tail_path,
+                                                              surv)))
+            with _obs_stage(topo, "rerank"):
+                out = block(stages.rerank_rows(rows, queries, surv, p.k,
+                                               p.metric or idx.metric))
+            return out
+
+        return run
+
+    if index.store.exact:
+        dist_j = jax.jit(partial(_exact_dists, metric=metric,
+                                 use_kernel=use_k))
+        merge_j = jax.jit(partial(stages.topk_ids, k=p.k))
+
+        def run(idx, queries):
+            with _obs_stage(topo, "hash_queries"):
+                qh = block(hash_j(idx.family, queries))
+            with _obs_stage(topo, "probe"):
+                cand = block(probe_j(idx, queries, qh))
+            with _obs_stage(topo, "gather"):  # exact store: distance gather
+                dist = block(dist_j(idx, queries, cand))
+            with _obs_stage(topo, "merge"):
+                out = block(merge_j(dist, cand))
+            return out
+
+        return run
+
+    surv_j = jax.jit(partial(_survivors_stage, params=p, metric=metric))
+    gather_j = jax.jit(_gather_rows)
+
+    def run(idx, queries):
+        with _obs_stage(topo, "hash_queries"):
+            qh = block(hash_j(idx.family, queries))
+        with _obs_stage(topo, "probe"):
+            cand = block(probe_j(idx, queries, qh))
+        with _obs_stage(topo, "survivors"):
+            surv, _ = surv_j(idx, queries, cand)
+            block(surv)
+        with _obs_stage(topo, "gather"):
+            rows = block(gather_j(idx, surv))
+        with _obs_stage(topo, "rerank"):
+            out = block(stages.rerank_rows(rows, queries, surv, p.k, metric))
+        return out
+
+    return run
+
+
 def _segmented_resolve(index, p: SearchParams) -> SearchParams:
     # `p.source` names the *per-segment* source; rewrite it onto the
     # registered "segmented" wrapper (source="segmented", inner=<source>)
@@ -119,10 +218,12 @@ def _segmented_resolve(index, p: SearchParams) -> SearchParams:
 
 
 register_topology(
-    "monolithic", resolve=_monolithic_resolve, build=_monolithic_build
+    "monolithic", resolve=_monolithic_resolve, build=_monolithic_build,
+    build_instrumented=_monolithic_build_instrumented,
 )
 # a segmented index always keeps its rerank tail resident (disk-lazy tails
 # are a static-index feature), so its executable is the plain one-jit body
 register_topology(
-    "segmented", resolve=_segmented_resolve, build=_monolithic_build
+    "segmented", resolve=_segmented_resolve, build=_monolithic_build,
+    build_instrumented=_monolithic_build_instrumented,
 )

@@ -18,6 +18,14 @@ per-request deadline.  The launcher warms every plan, polls the router's
 readiness probe (k8s-style: live workers + warm plan cache), then reports
 the SLO window: p50/p95/p99 end-to-end latency, deadline misses, queue
 depth, and the per-replica retrace audit.
+
+Observability (repro.obs): --metrics-port N serves Prometheus text format on
+:N/metrics and logs a periodic one-line stats summary; --trace PATH collects
+the request span tree (queue wait, embed, search, exec stages) and writes
+Chrome-trace JSON loadable at https://ui.perfetto.dev; --instrument serves
+through the staged per-stage-timed plans (bit-identical results);
+--drift-probe N replays N pinned queries against brute-force ground truth
+after serving and reports achieved recall (the recall-drift gauge).
 """
 from __future__ import annotations
 
@@ -112,13 +120,15 @@ def _serve_async(engine, corpus, picks, args, search_params) -> None:
             f"p50/p95/p99 = {lat['p50_ms']}/{lat['p95_ms']}/{lat['p99_ms']} ms; "
             f"self-retrieval {hits}/{len(tickets)}"
         )
-        # retrace audit, now per replica: misses must be flat after warm()
+        # retrace audit, now per replica: misses must be flat after warm(),
+        # and evictions flat always (an evicted plan is a future recompile)
         for r in st.replicas:
             print(
                 f"[launch.serve]   {r.name}: {r.serve['batches']} batches, "
                 f"sizes {r.batch_size_hist}, plan "
                 f"{r.serve['plan_misses']} compiles / "
-                f"{r.serve['plan_hits']} reuses"
+                f"{r.serve['plan_hits']} reuses / "
+                f"{r.serve['plan_evictions']} evictions"
             )
     finally:
         router.shutdown()
@@ -170,6 +180,24 @@ def main():
     ap.add_argument("--queue-depth", type=int, default=256,
                     help="per-replica admission bound (--async); beyond it "
                          "submit() rejects with a retry-after hint")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text format on this port "
+                         "(/metrics) and log a periodic one-line stats "
+                         "summary (repro.obs)")
+    ap.add_argument("--stats-interval", type=float, default=5.0,
+                    help="seconds between periodic stats log lines "
+                         "(with --metrics-port)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="collect the request span tree and write "
+                         "Chrome-trace JSON here (load at ui.perfetto.dev)")
+    ap.add_argument("--instrument", action="store_true",
+                    help="serve through the staged per-stage-timed plan "
+                         "variants: bit-identical results, every exec stage "
+                         "timed into repro_exec_stage_seconds and the trace")
+    ap.add_argument("--drift-probe", type=int, default=0, metavar="N",
+                    help="after serving, replay N pinned corpus queries "
+                         "against brute-force ground truth and report "
+                         "achieved recall (the repro_recall_drift gauge)")
     args = ap.parse_args()
 
     if args.shards > 1 and args.dynamic:
@@ -207,11 +235,27 @@ def main():
             params = state.params
             print(f"[launch.serve] restored step {meta['step']} from {args.ckpt_dir}")
 
+    # observability front: metrics endpoint + periodic log line + tracing
+    metrics_srv, stats_log = None, None
+    if args.metrics_port is not None:
+        from repro.obs import StatsLogger, start_metrics_server
+
+        metrics_srv = start_metrics_server(args.metrics_port)
+        stats_log = StatsLogger(interval_s=args.stats_interval).start()
+        print(f"[launch.serve] Prometheus metrics on "
+              f":{metrics_srv.port}/metrics "
+              f"(stats line every {args.stats_interval:.0f}s)")
+    if args.trace:
+        from repro.obs import enable_tracing
+
+        enable_tracing()
+
     engine = RetrievalEngine(cfg, params, m=args.m, metric="angular",
                              max_batch=args.max_batch,
                              search_params=search_params,
                              store=args.store,
-                             shards=args.shards if args.shards > 1 else None)
+                             shards=args.shards if args.shards > 1 else None,
+                             instrument=args.instrument)
     gen = lm_token_batches(vocab=cfg.vocab, seed=0)
     corpus, _ = gen(0, args.corpus, 32)
     # perf_counter, not time.time: the wall clock can step (NTP) mid-build,
@@ -230,6 +274,8 @@ def main():
     picks = rng.integers(0, args.corpus, args.requests)
     if args.async_serve:
         _serve_async(engine, corpus, picks, args, search_params)
+        _obs_epilogue(engine, corpus, args, search_params, metrics_srv,
+                      stats_log)
         return
     stream: list = [corpus[i] for i in picks]
     if args.dynamic:
@@ -253,10 +299,12 @@ def main():
         f"self-retrieval {hits}/{args.requests}"
     )
     # retrace audit: plan misses are staged-pipeline compiles (repro.exec);
-    # a steady-state serving loop must show a flat miss count
+    # a steady-state serving loop must show a flat miss count, and zero
+    # evictions (an evicted plan is a future recompile)
     print(
         f"[launch.serve] plan cache: {s.plan_misses} compiles / "
-        f"{s.plan_hits} reuses across {s.batches} batches"
+        f"{s.plan_hits} reuses / {s.plan_evictions} evictions "
+        f"across {s.batches} batches"
     )
     if args.dynamic:
         idx = engine.index
@@ -265,6 +313,34 @@ def main():
             f"{s.compactions} compactions; live={idx.n_live} "
             f"segments={idx.segment_sizes()} buffer={idx.buffer_count}"
         )
+    _obs_epilogue(engine, corpus, args, search_params, metrics_srv, stats_log)
+
+
+def _obs_epilogue(engine, corpus, args, search_params, metrics_srv,
+                  stats_log) -> None:
+    """Post-serve observability: drift probe, Chrome-trace export, metrics
+    teardown."""
+    if args.drift_probe:
+        from repro.obs import RecallDriftProbe
+
+        n = min(args.drift_probe, len(corpus))
+        sample = np.asarray(engine.embed(corpus[:n]))
+        probe = RecallDriftProbe(lambda: engine.index, sample,
+                                 search_params, label="launch.serve")
+        recall = probe.measure()
+        print(f"[launch.serve] recall-drift probe: "
+              f"recall@{search_params.k} = {recall:.3f} over {n} pinned "
+              f"queries (gauge repro_recall_drift)")
+    if args.trace:
+        from repro.obs import export_chrome_trace
+
+        doc = export_chrome_trace(args.trace)
+        print(f"[launch.serve] wrote {len(doc['traceEvents'])} trace events "
+              f"to {args.trace} (load at ui.perfetto.dev)")
+    if stats_log is not None:
+        stats_log.stop()
+    if metrics_srv is not None:
+        metrics_srv.close()
 
 
 if __name__ == "__main__":

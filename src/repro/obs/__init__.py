@@ -1,0 +1,74 @@
+"""`repro.obs`: end-to-end observability for the whole query path.
+
+One registry, one trace, one export surface (DESIGN.md §8):
+
+    registry   `Counter`/`Gauge`/`Histogram` with labels, lock-protected,
+               snapshot/delta windowing.  `ServeStats`, `RouterStats`,
+               `LatencyWindow`, and the plan cache's scope counters all emit
+               here, so "three disconnected stats surfaces" is over.
+    tracing    `span("embed")`-style context managers threaded through
+               Router.submit -> AdmissionQueue -> Replica ->
+               RetrievalEngine.serve_batch -> exec.execute, exported as
+               Chrome-trace JSON (perfetto-loadable); `device_profile()`
+               hooks `jax.profiler.trace` for real-TPU runs.
+    stages     instrumented plan variants (`execute(..., instrument=True)`)
+               time every exec stage with `block_until_ready` fences,
+               feeding `repro_exec_stage_seconds{topology,stage}`.
+    exposition `start_metrics_server(port)` serves Prometheus text format;
+               `StatsLogger` prints the periodic one-liner.
+    drift      `RecallDriftProbe` replays a pinned query sample against
+               brute-force ground truth and gauges achieved recall.
+
+Everything is opt-in and zero-overhead when off: tracing disabled is a
+single bool check, and un-instrumented plans are byte-for-byte the plans
+this package never touched.
+"""
+from .registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    registry,
+)
+from .trace import (
+    add_span,
+    clear_trace,
+    device_profile,
+    disable_tracing,
+    enable_tracing,
+    events,
+    export_chrome_trace,
+    span,
+    stage,
+    to_chrome_trace,
+    trace,
+    tracing_enabled,
+)
+from .prom import MetricsServer, StatsLogger, render_text, start_metrics_server
+from .drift import RecallDriftProbe, recall_at_k
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsServer",
+    "RecallDriftProbe",
+    "Registry",
+    "StatsLogger",
+    "add_span",
+    "clear_trace",
+    "device_profile",
+    "disable_tracing",
+    "enable_tracing",
+    "events",
+    "export_chrome_trace",
+    "recall_at_k",
+    "registry",
+    "render_text",
+    "span",
+    "stage",
+    "start_metrics_server",
+    "to_chrome_trace",
+    "trace",
+    "tracing_enabled",
+]

@@ -20,6 +20,8 @@ from dataclasses import asdict, dataclass, field
 
 import numpy as np
 
+from repro.obs.registry import registry
+
 _EMPTY = {"count": 0, "p50_ms": None, "p95_ms": None, "p99_ms": None,
           "mean_ms": None, "max_ms": None}
 
@@ -44,15 +46,33 @@ def percentiles_ms(latencies_s) -> dict:
 class LatencyWindow:
     """Bounded reservoir of recent per-request latencies (seconds).  The
     bound keeps a long-running router's memory flat; at the default 16k a
-    window holds every request of any sane measurement interval."""
+    window holds every request of any sane measurement interval.
 
-    def __init__(self, maxlen: int = 16384):
+    The lock covers every deque access: `record` runs on each replica's
+    worker thread while `values`/`percentiles` run on callers' threads, and
+    CPython deques only guarantee atomic single-op appends -- the
+    append-while-snapshotting pattern needs the explicit lock.  Each recorded
+    latency is also mirrored into the registry histogram
+    `repro_router_latency_seconds{replica=<label>}`, so Prometheus and the
+    registry's snapshot/delta windowing see the same stream this reservoir
+    holds (`clear()` clears only the window view -- registry series are
+    monotone by design)."""
+
+    def __init__(self, maxlen: int = 16384, label: str = "router"):
         self._vals: deque[float] = deque(maxlen=maxlen)
         self._lock = threading.Lock()
+        self.label = label
+        self._hist = registry().histogram(
+            "repro_router_latency_seconds",
+            "end-to-end submit-to-result request latency (queue wait "
+            "included)",
+            labelnames=("replica",),
+        )
 
     def record(self, seconds: float) -> None:
         with self._lock:
             self._vals.append(seconds)
+        self._hist.observe(seconds, replica=self.label)
 
     def values(self) -> list[float]:
         with self._lock:

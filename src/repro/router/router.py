@@ -38,8 +38,17 @@ from collections import Counter
 
 import numpy as np
 
+# NOTE: the submodule import path, not `from repro.obs import trace` -- the
+# package re-exports the trace() contextmanager under that name
+from repro.obs.registry import registry
+from repro.obs.trace import add_span as _add_span
+from repro.obs.trace import span as _span
+
 from .metrics import LatencyWindow, ReplicaStats, RouterStats, percentiles_ms
 from .queue import AdmissionQueue, QueueFull, Request, Ticket
+
+# batch sizes are small powers-of-two-ish counts, not durations
+_BATCH_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0)
 
 
 def _pad_rows(rows: np.ndarray, to: int) -> np.ndarray:
@@ -63,7 +72,21 @@ class Replica:
         self.linger_s = linger_s
         self.pad_batches = pad_batches
         self.queue = AdmissionQueue(max_depth, name=name)
-        self.latency = LatencyWindow()
+        self.latency = LatencyWindow(label=name)
+        reg = registry()
+        self._c_completed = reg.counter(
+            "repro_router_completed_total", "requests served to completion",
+            labelnames=("replica",))
+        self._c_misses = reg.counter(
+            "repro_router_deadline_misses_total",
+            "requests completed after their deadline",
+            labelnames=("replica",))
+        self._h_batch = reg.histogram(
+            "repro_router_batch_size", "live requests per served micro-batch",
+            labelnames=("replica",), buckets=_BATCH_BUCKETS)
+        self._g_depth = reg.gauge(
+            "repro_router_queue_depth", "admitted requests awaiting service",
+            labelnames=("replica",))
         # monotonic totals; the window view subtracts the baselines below
         self.finished = 0      # requests that left the worker (ok or failed)
         self.completed = 0     # successfully served
@@ -92,6 +115,10 @@ class Replica:
             if self.pad_batches:
                 tokens = _pad_rows(tokens, eng.max_batch)
             t0 = time.perf_counter()
+            # retroactive queue-wait span: admission happened on the
+            # submitter's thread, so the wait is only known at batch start
+            _add_span("queue_wait", min(r.t_submit for r in batch), t0,
+                      batch=n_live, replica=self.name)
             try:
                 pending = eng.serve_batch_nowait(tokens, self.params,
                                                  n_live=n_live)
@@ -104,13 +131,20 @@ class Replica:
             t_done = time.perf_counter()
             self.queue.note_service(t_done - t0, n_live)
             self.hist[n_live] += 1
+            self._h_batch.observe(n_live, replica=self.name)
+            misses = 0
             for i, r in enumerate(batch):
                 r.ticket._fulfil((ids[i], dists[i]))
                 self.latency.record(t_done - r.t_submit)
                 if t_done > r.deadline:
                     self.deadline_misses += 1
+                    misses += 1
             self.completed += n_live
             self.finished += n_live
+            self._c_completed.inc(n_live, replica=self.name)
+            if misses:
+                self._c_misses.inc(misses, replica=self.name)
+            self._g_depth.set(self.queue.depth(), replica=self.name)
 
     def reset_window(self) -> None:
         self.latency.clear()
@@ -160,6 +194,12 @@ class Router:
         self._b_rejected = 0
         self._rr = 0
         self._shutdown = False
+        reg = registry()
+        self._c_admitted = reg.counter(
+            "repro_router_admitted_total", "requests admitted to a queue")
+        self._c_rejected = reg.counter(
+            "repro_router_rejected_total",
+            "requests rejected at admission (queue full)")
         for r in self.replicas:
             r.start()
 
@@ -185,6 +225,7 @@ class Router:
                 max_batch=engine.max_batch,
                 search_params=engine.search_params, store=engine.store,
                 shards=engine.shards, name=f"replica-{i}",
+                instrument=getattr(engine, "instrument", False),
             )
             e._embed = engine._embed  # share the compiled backbone
             e.index = engine.index    # share the (immutable) index
@@ -210,22 +251,26 @@ class Router:
             )
         now = time.perf_counter()
         slo_ms = self.default_slo_ms if deadline_ms is None else deadline_ms
-        depths = [r.queue.depth() for r in self.replicas]
-        best = min(depths)
-        cands = [i for i, d in enumerate(depths) if d == best]
-        with self._lock:
-            pick = cands[self._rr % len(cands)]
-            self._rr += 1
-        replica = self.replicas[pick]
-        ticket = Ticket(now + slo_ms / 1e3, now, replica.name)
-        try:
-            replica.queue.offer(Request(tokens, ticket.deadline, now, ticket))
-        except QueueFull:
+        with _span("router.submit"):
+            depths = [r.queue.depth() for r in self.replicas]
+            best = min(depths)
+            cands = [i for i, d in enumerate(depths) if d == best]
             with self._lock:
-                self._rejected += 1
-            raise
-        with self._lock:
-            self._admitted += 1
+                pick = cands[self._rr % len(cands)]
+                self._rr += 1
+            replica = self.replicas[pick]
+            ticket = Ticket(now + slo_ms / 1e3, now, replica.name)
+            try:
+                replica.queue.offer(
+                    Request(tokens, ticket.deadline, now, ticket))
+            except QueueFull:
+                with self._lock:
+                    self._rejected += 1
+                self._c_rejected.inc()
+                raise
+            with self._lock:
+                self._admitted += 1
+            self._c_admitted.inc()
         return ticket
 
     def submit_many(self, requests, *, deadline_ms=None) -> list[Ticket]:

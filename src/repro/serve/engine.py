@@ -33,8 +33,11 @@ import numpy as np
 
 from repro.compat import ReproDeprecationWarning
 from repro.core import LCCSIndex, SearchParams, SegmentedLCCSIndex
-from repro.exec import compile_plan
+from repro.exec import compile_plan, plan_cache
 from repro.models import lm
+from repro.obs.trace import add_span as _add_span
+from repro.obs.trace import span as _span
+from repro.obs.registry import registry
 from repro.shard import make_shard_mesh
 
 DEFAULT_PARAMS = SearchParams(k=5, lam=64)
@@ -51,9 +54,13 @@ class ServeStats:
     compactions: int = 0
     # plan-cache deltas from this engine's serving calls (repro.exec):
     # plan_misses counts staged-pipeline compiles, plan_hits reuses -- a
-    # steady-state serving loop must only ever grow plan_hits
+    # steady-state serving loop must only ever grow plan_hits.
+    # plan_evictions counts this engine's compiled plans later pushed out of
+    # the LRU cache: nonzero means the cache is thrashing (each eviction is
+    # a future recompile) and the fleet's plan diversity exceeds its size.
     plan_hits: int = 0
     plan_misses: int = 0
+    plan_evictions: int = 0
 
     def snapshot(self) -> "ServeStats":
         """An independent copy -- the window baseline the serving front
@@ -105,13 +112,13 @@ class PendingBatch:
         t1 = time.perf_counter()
         jax.block_until_ready(self._dists)
         t2 = time.perf_counter()
-        s = self._engine.stats
-        s.requests += self._n_live
-        s.batches += 1
-        s.embed_s += t1 - self._t0
-        s.search_s += max(t2 - t1, 0.0)
-        s.plan_hits += int(self._hit)
-        s.plan_misses += int(not self._hit)
+        self._engine._record_serve(self._n_live, t1 - self._t0,
+                                   max(t2 - t1, 0.0), self._hit)
+        # retroactive spans: the embed/search device drains happened between
+        # dispatch (t0) and now, on whatever thread called result()
+        _add_span("serve_batch", self._t0, t2, batch=self._n_live)
+        _add_span("embed", self._t0, t1)
+        _add_span("search", t1, t2)
         self._out = (np.asarray(self._ids), np.asarray(self._dists))
         return self._out
 
@@ -121,7 +128,7 @@ class RetrievalEngine:
                  max_batch: int = 32,
                  search_params: SearchParams = DEFAULT_PARAMS,
                  store: str = "fp32", shards: int | None = None,
-                 name: str | None = None):
+                 name: str | None = None, instrument: bool = False):
         self.cfg = cfg
         # `name` labels this engine's plan-cache activity (repro.exec scope
         # attribution); the replica router names its engines replica-0..N
@@ -138,9 +145,55 @@ class RetrievalEngine:
         # shards > 1 partitions the built index over that many devices
         # (repro.shard): shard-local search + exact global top-k merge
         self.shards = shards
+        # instrument=True serves through the staged per-stage-timed plan
+        # variants (repro.exec `instrument`): bit-identical results, every
+        # exec stage lands in repro_exec_stage_seconds and the trace
+        self.instrument = instrument
         self.index: LCCSIndex | None = None
         self.stats = ServeStats()
+        # registry twins of the ServeStats counters: `stats` stays the cheap
+        # windowed per-engine view (snapshot/delta), the registry series --
+        # labeled by engine -- are what Prometheus and StatsLogger read
+        self._obs_label = name or "default"
+        reg = registry()
+        self._c_requests = reg.counter(
+            "repro_serve_requests_total", "queries served",
+            labelnames=("engine",))
+        self._c_batches = reg.counter(
+            "repro_serve_batches_total", "serving micro-batches completed",
+            labelnames=("engine",))
+        self._c_embed_s = reg.counter(
+            "repro_serve_embed_seconds_total",
+            "wall seconds in the embedding stage", labelnames=("engine",))
+        self._c_search_s = reg.counter(
+            "repro_serve_search_seconds_total",
+            "wall seconds in the staged search", labelnames=("engine",))
+        self._c_updates = reg.counter(
+            "repro_serve_updates_total",
+            "corpus updates applied (insert/delete/compact)",
+            labelnames=("engine", "op"))
+        # eviction attribution is engine-side delta tracking over the plan
+        # cache's per-scope counter (the cache can't push, so we pull)
+        self._last_evictions = plan_cache().scope_evictions(self.name)
         self._embed = jax.jit(self._embed_fn)
+
+    def _record_serve(self, n: int, embed_s: float, search_s: float,
+                      hit: bool) -> None:
+        """Finalize one served micro-batch into both stats surfaces."""
+        s = self.stats
+        s.requests += n
+        s.batches += 1
+        s.embed_s += embed_s
+        s.search_s += search_s
+        s.plan_hits += int(hit)
+        s.plan_misses += int(not hit)
+        ev = plan_cache().scope_evictions(self.name)
+        s.plan_evictions += ev - self._last_evictions
+        self._last_evictions = ev
+        self._c_requests.inc(n, engine=self._obs_label)
+        self._c_batches.inc(engine=self._obs_label)
+        self._c_embed_s.inc(embed_s, engine=self._obs_label)
+        self._c_search_s.inc(search_s, engine=self._obs_label)
 
     def _embed_fn(self, tokens):
         hidden, _ = lm.forward(self.params, tokens, self.cfg, mode="train")
@@ -193,18 +246,21 @@ class RetrievalEngine:
         """Embed + insert new corpus documents; returns their global ids."""
         gids = self._dynamic_index().insert(self.embed(corpus_tokens))
         self.stats.inserts += len(gids)
+        self._c_updates.inc(len(gids), engine=self._obs_label, op="insert")
         return gids
 
     def delete(self, ids) -> int:
         """Tombstone corpus documents by global id."""
         n = self._dynamic_index().delete(ids)
         self.stats.deletes += n
+        self._c_updates.inc(n, engine=self._obs_label, op="delete")
         return n
 
     def compact(self, *, full: bool = False) -> int:
         """Roll the delta buffer (and small segments) into a CSA segment."""
         n = self._dynamic_index().compact(full=full)
         self.stats.compactions += 1
+        self._c_updates.inc(engine=self._obs_label, op="compact")
         return n
 
     def _resolve_params(self, params, legacy) -> SearchParams:
@@ -226,28 +282,28 @@ class RetrievalEngine:
         """One micro-batched serving step.  Returns (ids, dists)."""
         assert self.index is not None, "build_index first"
         p = self._resolve_params(params, legacy)
-        t0 = time.perf_counter()
-        q_emb = self.embed(query_tokens)
-        # the embedding is dispatched asynchronously: without an explicit
-        # block the device work would drain inside the search timing below,
-        # silently crediting embed time to search_s
-        jax.block_until_ready(q_emb)
-        t1 = time.perf_counter()
-        # one entry point for every topology: the plan resolves the source
-        # rewrite ("segmented"/"sharded") and caches the compiled pipeline.
-        # return_hit attributes THIS call's cache outcome race-free (other
-        # engines/threads may be compiling concurrently).
-        plan, hit = compile_plan(self.index, q_emb, p, return_hit=True,
-                                 scope=self.name)
-        ids, dists = plan.run(self.index, jnp.asarray(q_emb, jnp.float32))
-        jax.block_until_ready(dists)
-        t2 = time.perf_counter()
-        self.stats.requests += query_tokens.shape[0]
-        self.stats.batches += 1
-        self.stats.embed_s += t1 - t0
-        self.stats.search_s += t2 - t1
-        self.stats.plan_hits += int(hit)
-        self.stats.plan_misses += int(not hit)
+        with _span("serve_batch", batch=int(query_tokens.shape[0])):
+            t0 = time.perf_counter()
+            with _span("embed"):
+                q_emb = self.embed(query_tokens)
+                # the embedding is dispatched asynchronously: without an
+                # explicit block the device work would drain inside the search
+                # timing below, silently crediting embed time to search_s
+                jax.block_until_ready(q_emb)
+            t1 = time.perf_counter()
+            # one entry point for every topology: the plan resolves the source
+            # rewrite ("segmented"/"sharded") and caches the compiled
+            # pipeline.  return_hit attributes THIS call's cache outcome
+            # race-free (other engines/threads may be compiling concurrently).
+            with _span("search"):
+                plan, hit = compile_plan(self.index, q_emb, p,
+                                         return_hit=True, scope=self.name,
+                                         instrument=self.instrument)
+                ids, dists = plan.run(self.index,
+                                      jnp.asarray(q_emb, jnp.float32))
+                jax.block_until_ready(dists)
+            t2 = time.perf_counter()
+        self._record_serve(int(query_tokens.shape[0]), t1 - t0, t2 - t1, hit)
         return np.asarray(ids), np.asarray(dists)
 
     def serve_batch_nowait(self, query_tokens: np.ndarray,
@@ -265,7 +321,7 @@ class RetrievalEngine:
         t0 = time.perf_counter()
         q_emb = self.embed(query_tokens)
         plan, hit = compile_plan(self.index, q_emb, p, return_hit=True,
-                                 scope=self.name)
+                                 scope=self.name, instrument=self.instrument)
         ids, dists = plan.run(self.index, jnp.asarray(q_emb, jnp.float32))
         n = query_tokens.shape[0] if n_live is None else n_live
         return PendingBatch(self, q_emb, ids, dists, n, hit, t0)

@@ -135,42 +135,61 @@ def _shard_call(index: ShardedLCCSIndex, local_fn, out_specs):
 # ---------------------------------------------------------------------------
 
 
-def _local_search(family, store, h, csa, gid, tail, queries, qh,
-                  *, params, metric, axis, shards):
-    view, gid_l = _local_view(family, store, h, csa, gid, tail, metric)
+def _probe_local(view, gid_l, queries, qh, params, shards):
+    """Per-shard probe half: the inner source under the apportioned budget,
+    local ids mapped to global and padded rows masked.  Returns
+    (ids_l (B, lam_l) local ids, g (B, lam_l) global ids)."""
     p_l = _local_params(params, shards)  # per-shard budget share
     ids_l, _ = get_source(_inner_name(p_l))(view, queries, qh, p_l)
     g = stages.local_to_global(ids_l, gid_l)
-    ids_l = jnp.where(g >= 0, ids_l, -1)  # mask padded rows before gathers
-    use_kernel = stages.resolve_use_kernel(params.use_gather_kernel)
-    B = queries.shape[0]
+    return jnp.where(g >= 0, ids_l, -1), g  # mask padded rows before gathers
 
+
+def _verify_local(view, gid_l, ids_l, g, queries, params, metric, shards):
+    """Per-shard verify half -> this shard's pre-merge payload: an exact
+    store yields its local (ids_k, d_k) top-k, an inexact one its stage-1
+    (global survivor ids, approx dists, fp32 rerank rows)."""
+    use_kernel = stages.resolve_use_kernel(params.use_gather_kernel)
     if view.store.exact:
-        # single-stage: shard-local exact_topk (global ids), merged top-k
-        ids_k, d_k = stages.exact_topk(
+        # single-stage: shard-local exact_topk (global ids reported)
+        return stages.exact_topk(
             view.store, queries, ids_l, g, params.k, metric, use_kernel
         )
-        all_ids = jax.lax.all_gather(ids_k, axis, axis=1).reshape(B, -1)
-        all_d = jax.lax.all_gather(d_k, axis, axis=1).reshape(B, -1)
-        return stages.merge_topk(all_d, all_ids, params.k)
-
-    # two-stage: per-shard stage-1 scan (local budget), merged exact rerank
-    # (the merge stages keep the GLOBAL params: cut_survivors reproduces the
-    # monolithic min(k*rerank_mult, lam) stage-1 survivor set)
+    # two-stage: per-shard stage-1 scan under the LOCAL budget share
+    p_l = _local_params(params, shards)
     surv_l, approx = stages.survivors(view.store, queries, ids_l,
                                       p_l, metric)
     g_surv = stages.local_to_global(surv_l, gid_l)
     rows_f = stages.gather_fp32(view.store, view.tail, surv_l)  # (B, R, d)
-    all_ids = jax.lax.all_gather(g_surv, axis, axis=1).reshape(B, -1)
-    all_a = jax.lax.all_gather(approx, axis, axis=1).reshape(B, -1)
-    all_rows = jax.lax.all_gather(rows_f, axis, axis=1).reshape(
-        B, -1, rows_f.shape[-1]
-    )
-    # cut the merged pool back to the monolithic stage-1 survivor set: the
-    # global top-R by approximate distance (each shard's local top-R is a
-    # superset of its members of the global top-R, so nothing is lost)
+    return g_surv, approx, rows_f
+
+
+def _merge_global(parts, queries, params, metric, exact: bool):
+    """Global merge half over the pooled per-shard payloads (each (B, S*...)
+    along axis 1).  The merge stages keep the GLOBAL params: cut_survivors
+    reproduces the monolithic min(k*rerank_mult, lam) stage-1 survivor set --
+    each shard's local top-R is a superset of its members of the global
+    top-R, so nothing is lost."""
+    if exact:
+        all_ids, all_d = parts
+        return stages.merge_topk(all_d, all_ids, params.k)
+    all_ids, all_a, all_rows = parts
     ids_sel, rows_sel = stages.cut_survivors(all_ids, all_a, all_rows, params)
     return stages.rerank_rows(rows_sel, queries, ids_sel, params.k, metric)
+
+
+def _local_search(family, store, h, csa, gid, tail, queries, qh,
+                  *, params, metric, axis, shards):
+    view, gid_l = _local_view(family, store, h, csa, gid, tail, metric)
+    ids_l, g = _probe_local(view, gid_l, queries, qh, params, shards)
+    parts = _verify_local(view, gid_l, ids_l, g, queries, params, metric,
+                          shards)
+    B = queries.shape[0]
+    pool = lambda x: jax.lax.all_gather(x, axis, axis=1).reshape(
+        (B, -1) + x.shape[2:]
+    )
+    return _merge_global(tuple(pool(x) for x in parts), queries, params,
+                         metric, view.store.exact)
 
 
 def _search_impl(index: ShardedLCCSIndex, queries: jax.Array,
@@ -245,7 +264,99 @@ def _sharded_build(index, p: SearchParams):
     return jax.jit(partial(_search_impl, params=p))
 
 
-register_topology("sharded", resolve=_sharded_resolve, build=_sharded_build)
+# -- instrumented (staged) variant -----------------------------------------
+#
+# The same arithmetic as `_sharded_build`, split at the natural collective
+# boundaries so `repro_exec_stage_seconds{topology="sharded"}` times each
+# stage (hash_queries / probe / verify / merge) with `block_until_ready`
+# fences.  The probe and verify halves each run as their own shard_map whose
+# out_specs `P(None, axis)` concatenate the per-shard (B, x) payloads into
+# (B, S*x) along axis 1 -- the SAME ordering `all_gather(..., axis=1)
+# .reshape(B, -1)` produces inside the fused plan -- and the verify
+# shard_map's `P(None, axis)` in_specs hand each shard exactly its own block
+# back, so the staged results are bit-identical to the fused ones.
+
+
+def _shard_call_staged(index: ShardedLCCSIndex, local_fn, out_specs,
+                       extra_in_specs):
+    """`_shard_call` with trailing pre-sharded extras: the index pytrees and
+    queries go in as usual, plus `extra_in_specs`-partitioned arrays (the
+    probe half's pooled output fed back to the verify half)."""
+    axis = index.axis
+    rep = lambda t: jax.tree.map(lambda _: P(), t)
+    shd = lambda t: jax.tree.map(lambda x: _row_spec(x, axis), t)
+    return shard_map(
+        local_fn,
+        mesh=index.mesh,
+        in_specs=(
+            rep(index.family),
+            shd(index.store),
+            _row_spec(index.h, axis),
+            shd(index.csa),
+            _row_spec(index.gid, axis),
+            shd(index.tail),
+            P(),  # queries replicated
+        ) + tuple(extra_in_specs),
+        out_specs=out_specs,
+        check_rep=False,
+    )
+
+
+def _sharded_build_instrumented(index, p: SearchParams):
+    from repro.obs.trace import stage as _obs_stage
+
+    axis = index.axis
+    metric = p.metric or index.metric
+    exact = index.store.exact
+    shards = index.shards
+    block = jax.block_until_ready
+    col = P(None, axis)  # (B, S*x) pooled along axis 1, mesh device order
+
+    hash_j = jax.jit(stages.hash_queries)
+
+    def probe_local(family, store, h, csa, gid, tail, queries, qh):
+        view, gid_l = _local_view(family, store, h, csa, gid, tail, metric)
+        return _probe_local(view, gid_l, queries, qh, p, shards)
+
+    probe_j = jax.jit(_shard_call_staged(
+        index, probe_local, out_specs=(col, col), extra_in_specs=(P(),)
+    ))
+
+    def verify_local(family, store, h, csa, gid, tail, queries, ids_l, g):
+        view, gid_l = _local_view(family, store, h, csa, gid, tail, metric)
+        return _verify_local(view, gid_l, ids_l, g, queries, p, metric,
+                             shards)
+
+    verify_j = jax.jit(_shard_call_staged(
+        index, verify_local,
+        out_specs=(col, col) if exact else (col, col, col),
+        extra_in_specs=(col, col),
+    ))
+
+    merge_j = jax.jit(lambda parts, queries: _merge_global(
+        parts, queries, p, metric, exact
+    ))
+
+    def run(idx, queries):
+        with _obs_stage("sharded", "hash_queries"):
+            qh = block(hash_j(idx.family, queries))
+        with _obs_stage("sharded", "probe"):
+            ids_all, g_all = probe_j(idx.family, idx.store, idx.h, idx.csa,
+                                     idx.gid, idx.tail, queries, qh)
+            block((ids_all, g_all))
+        with _obs_stage("sharded", "verify"):
+            parts = verify_j(idx.family, idx.store, idx.h, idx.csa, idx.gid,
+                             idx.tail, queries, ids_all, g_all)
+            block(parts)
+        with _obs_stage("sharded", "merge"):
+            out = block(merge_j(parts, queries))
+        return out
+
+    return run
+
+
+register_topology("sharded", resolve=_sharded_resolve, build=_sharded_build,
+                  build_instrumented=_sharded_build_instrumented)
 
 
 # ---------------------------------------------------------------------------
