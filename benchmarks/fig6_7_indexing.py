@@ -2,7 +2,6 @@
 recall target (paper uses 50%).  LCCS/MP-LCCS sweep m; E2LSH sweeps L."""
 from __future__ import annotations
 
-import numpy as np
 
 from .common import CsvRows, dataset, ground_truth, recall, timed
 

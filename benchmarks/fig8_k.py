@@ -1,7 +1,6 @@
 """Paper Figure 8: sensitivity to k (recall / ratio / query time)."""
 from __future__ import annotations
 
-import numpy as np
 
 from .common import CsvRows, dataset, ground_truth, overall_ratio, recall, timed
 

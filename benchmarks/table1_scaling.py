@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import CsvRows, dataset, ground_truth, timed
+from .common import CsvRows, dataset, timed
 
 
 def run(csv: CsvRows):

@@ -1,0 +1,61 @@
+"""repro.analysis: JAX/Pallas-aware static analysis for this repo.
+
+Stdlib-only (ast + tokenize) -- importing this package must not import jax,
+numpy, or any repro runtime module, so the CI gate runs with no device init
+and no heavyweight install.
+
+Passes (see each module's docstring for the rule catalog):
+
+    races     GB001-GB003  `# guarded-by:` lock-discipline checker
+    retrace   RT001-RT004  retrace/concretization hazards in traced scopes
+    kernels   KC001-KC004  Pallas kernel structure + VMEM-residency bounds
+    pytrees   PT001-PT003  pytree registration / static-field hashability
+
+CLI: ``python -m repro.analysis [paths] [--strict] [--select RULES]
+[--passes NAMES] [--baseline FILE] [--format text|json]``.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterable
+
+from . import kernels, pytrees, races, retrace
+from .common import (ERROR, NOTE, SEVERITIES, WARNING, Baseline, Finding,
+                     SourceFile, load_sources)
+
+__all__ = [
+    "PASSES", "Baseline", "Finding", "SourceFile",
+    "ERROR", "WARNING", "NOTE", "SEVERITIES",
+    "analyze_source", "analyze_paths", "run_passes",
+]
+
+PASSES = {
+    "races": races.run,
+    "retrace": retrace.run,
+    "kernels": kernels.run,
+    "pytrees": pytrees.run,
+}
+
+_SEV_ORDER = {sev: i for i, sev in enumerate(SEVERITIES)}
+
+
+def run_passes(sources: list[SourceFile],
+               passes: Iterable[str] | None = None) -> list[Finding]:
+    """All findings from the selected passes, sorted by (path, line)."""
+    findings: list[Finding] = []
+    for name in passes or PASSES:
+        findings.extend(PASSES[name](sources))
+    findings.sort(key=lambda f: (f.path, f.line, _SEV_ORDER[f.severity],
+                                 f.rule))
+    return findings
+
+
+def analyze_source(text: str, path: str = "<snippet>",
+                   passes: Iterable[str] | None = None) -> list[Finding]:
+    """Analyze one in-memory module -- the test-fixture entry point."""
+    return run_passes([SourceFile.parse(text, path)], passes)
+
+
+def analyze_paths(paths: Iterable[Path], root: Path,
+                  passes: Iterable[str] | None = None) -> list[Finding]:
+    return run_passes(load_sources(paths, root), passes)

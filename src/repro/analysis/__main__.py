@@ -1,0 +1,112 @@
+"""CLI driver: ``python -m repro.analysis``.
+
+Exit codes: 0 clean (or warnings without --strict), 1 unsuppressed errors
+(or, under --strict, warnings / stale baseline entries), 2 usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import PASSES, run_passes
+from .common import ERROR, WARNING, Baseline, load_sources
+
+
+def _repo_root() -> Path:
+    # src/repro/analysis/__main__.py -> repo root is three parents above src/
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv: list[str] | None = None) -> int:
+    root = _repo_root()
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX/Pallas-aware static analysis (stdlib-only; "
+                    "no jax import, no device init).",
+    )
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files/dirs to analyze (default: src/repro)")
+    ap.add_argument("--passes", default=None,
+                    help="comma-separated pass names "
+                         f"(default: all of {','.join(PASSES)})")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule-id prefixes to keep "
+                         "(e.g. GB,RT002)")
+    ap.add_argument("--baseline", type=Path,
+                    default=root / "analysis_baseline.txt",
+                    help="suppression baseline file (default: "
+                         "analysis_baseline.txt at the repo root; pass an "
+                         "empty/missing path to disable)")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on warnings and stale baseline entries too")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress notes (KC004 estimates, suppressed hits)")
+    args = ap.parse_args(argv)
+
+    pass_names = None
+    if args.passes:
+        pass_names = [p.strip() for p in args.passes.split(",") if p.strip()]
+        unknown = [p for p in pass_names if p not in PASSES]
+        if unknown:
+            print(f"unknown pass(es): {', '.join(unknown)} "
+                  f"(available: {', '.join(PASSES)})", file=sys.stderr)
+            return 2
+
+    paths = args.paths or [root / "src" / "repro"]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"no such path(s): {', '.join(map(str, missing))}",
+              file=sys.stderr)
+        return 2
+
+    sources = load_sources(paths, root)
+    findings = run_passes(sources, pass_names)
+
+    if args.select:
+        prefixes = tuple(s.strip() for s in args.select.split(",") if s.strip())
+        findings = [f for f in findings if f.rule.startswith(prefixes)]
+
+    stale: list[tuple[str, str, str]] = []
+    suppressed = []
+    if args.baseline and args.baseline.exists():
+        try:
+            baseline = Baseline.load(args.baseline)
+        except ValueError as e:
+            print(f"bad baseline: {e}", file=sys.stderr)
+            return 2
+        findings, suppressed, stale = baseline.split(findings)
+
+    errors = [f for f in findings if f.severity == ERROR]
+    warnings = [f for f in findings if f.severity == WARNING]
+    notes = [f for f in findings if f.severity not in (ERROR, WARNING)]
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [vars(f) for f in findings],
+            "suppressed": [vars(f) for f in suppressed],
+            "stale_baseline": [list(k) for k in stale],
+        }, indent=2))
+    else:
+        shown = errors + warnings + ([] if args.quiet else notes + suppressed)
+        for f in sorted(shown, key=lambda f: (f.path, f.line)):
+            print(f.render())
+        for rule, path, symbol in stale:
+            print(f"{args.baseline}: stale baseline entry "
+                  f"{rule} {path}::{symbol} (matched nothing)")
+        print(f"{len(errors)} error(s), {len(warnings)} warning(s), "
+              f"{len(notes)} note(s), {len(suppressed)} suppressed, "
+              f"{len(stale)} stale baseline entr(ies) "
+              f"[{len(sources)} file(s)]")
+
+    if errors:
+        return 1
+    if args.strict and (warnings or stale):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

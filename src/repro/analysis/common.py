@@ -1,0 +1,297 @@
+"""Shared infrastructure for the `repro.analysis` passes.
+
+Everything here is stdlib-only (ast + tokenize): the passes must run in a CI
+job with no jax install step and no device init, so nothing in this package
+may import jax or any repro runtime module.
+
+The vocabulary:
+
+    SourceFile   one parsed module: path, text, AST (with parent links),
+                 per-line comments, and an import-alias table so passes can
+                 resolve `pl.pallas_call` -> "jax.experimental.pallas
+                 .pallas_call" without executing anything.
+    Finding      one diagnostic: (rule, severity, path, line, symbol,
+                 message).  `symbol` is the enclosing `Class.method`
+                 qualname -- the suppression baseline keys on it instead of
+                 line numbers so entries survive unrelated edits.
+    Baseline     the checked-in suppression list (analysis_baseline.txt):
+                 one `RULE path::symbol  justification` line per accepted
+                 finding; entries without a justification are rejected, and
+                 stale entries are surfaced so the file cannot rot.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import tokenize
+from dataclasses import dataclass, field, replace
+from pathlib import Path
+from typing import Iterable, Iterator
+
+# severity levels, strongest first
+ERROR = "error"
+WARNING = "warning"
+NOTE = "note"
+SEVERITIES = (ERROR, WARNING, NOTE)
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    severity: str
+    path: str  # repo-relative, forward slashes
+    line: int
+    symbol: str  # enclosing qualname ("Class.method", "function", "<module>")
+    message: str
+
+    def key(self) -> tuple[str, str, str]:
+        """The baseline suppression key: stable across unrelated edits."""
+        return (self.rule, self.path, self.symbol)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: {self.severity} {self.rule} "
+                f"[{self.symbol}] {self.message}")
+
+
+# ---------------------------------------------------------------------------
+# Parsed source files
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SourceFile:
+    path: str
+    text: str
+    tree: ast.Module
+    comments: dict[int, str] = field(default_factory=dict)  # line -> comment
+    aliases: dict[str, str] = field(default_factory=dict)  # local -> dotted
+    _parents: dict[ast.AST, ast.AST] = field(default_factory=dict, repr=False)
+
+    @classmethod
+    def parse(cls, text: str, path: str) -> "SourceFile":
+        tree = ast.parse(text, filename=path)
+        sf = cls(path=path, text=text, tree=tree)
+        sf.comments = _extract_comments(text)
+        sf.aliases = _extract_aliases(tree)
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                sf._parents[child] = parent
+        return sf
+
+    @classmethod
+    def load(cls, path: Path, root: Path | None = None) -> "SourceFile":
+        rel = str(path.relative_to(root)) if root else str(path)
+        return cls.parse(path.read_text(), rel.replace("\\", "/"))
+
+    # -- navigation ----------------------------------------------------------
+
+    def parent(self, node: ast.AST) -> ast.AST | None:
+        return self._parents.get(node)
+
+    def qualname(self, node: ast.AST) -> str:
+        """Enclosing `Class.method`-style qualname of a node (for Finding
+        symbols); a def/class node includes its own name; "<module>" at
+        module level."""
+        parts: list[str] = []
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            parts.append(node.name)
+        cur = self._parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                parts.append(cur.name)
+            cur = self._parents.get(cur)
+        return ".".join(reversed(parts)) or "<module>"
+
+    def comment_on(self, node: ast.AST) -> str:
+        """The trailing comment on a node's first line ("" when none)."""
+        return self.comments.get(getattr(node, "lineno", -1), "")
+
+    # -- name resolution -----------------------------------------------------
+
+    def resolve(self, node: ast.AST) -> str | None:
+        """Dotted name of a Name/Attribute chain with import aliases expanded:
+        `pl.pallas_call` -> "jax.experimental.pallas.pallas_call",
+        `partial` (from functools import partial) -> "functools.partial".
+        None for anything that is not a plain dotted chain."""
+        parts: list[str] = []
+        cur = node
+        while isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        if not isinstance(cur, ast.Name):
+            return None
+        head = self.aliases.get(cur.id, cur.id)
+        return ".".join([head] + list(reversed(parts)))
+
+    def finding(self, rule: str, severity: str, node: ast.AST,
+                message: str) -> Finding:
+        return Finding(rule=rule, severity=severity, path=self.path,
+                       line=getattr(node, "lineno", 0),
+                       symbol=self.qualname(node), message=message)
+
+
+def _extract_comments(text: str) -> dict[int, str]:
+    out: dict[int, str] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+            if tok.type == tokenize.COMMENT:
+                out[tok.start[0]] = tok.string
+    except tokenize.TokenError:  # pragma: no cover -- ast.parse caught worse
+        pass
+    return out
+
+
+def _extract_aliases(tree: ast.Module) -> dict[str, str]:
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def iter_py_files(paths: Iterable[Path]) -> Iterator[Path]:
+    for p in paths:
+        if p.is_dir():
+            yield from sorted(
+                f for f in p.rglob("*.py") if "__pycache__" not in f.parts
+            )
+        elif p.suffix == ".py":
+            yield p
+
+
+def load_sources(paths: Iterable[Path], root: Path) -> list[SourceFile]:
+    out = []
+    for f in iter_py_files(paths):
+        try:
+            rel = f.resolve().relative_to(root.resolve())
+        except ValueError:
+            rel = f
+        out.append(SourceFile.parse(f.read_text(), str(rel).replace("\\", "/")))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by passes
+# ---------------------------------------------------------------------------
+
+def is_dataclass_decorated(node: ast.ClassDef,
+                           sf: SourceFile) -> tuple[bool, bool]:
+    """(is_dataclass, is_frozen) from the decorator list."""
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = sf.resolve(target)
+        if name in ("dataclass", "dataclasses.dataclass"):
+            frozen = False
+            if isinstance(dec, ast.Call):
+                for kw in dec.keywords:
+                    if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                        frozen = bool(kw.value.value)
+            return True, frozen
+    return False, False
+
+
+def decorator_names(node: ast.FunctionDef | ast.AsyncFunctionDef,
+                    sf: SourceFile) -> list[str]:
+    """Resolved dotted names of every decorator (for a Call decorator, the
+    callee's name -- `@partial(jax.jit, ...)` yields "functools.partial")."""
+    out = []
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = sf.resolve(target)
+        if name:
+            out.append(name)
+    return out
+
+
+MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                    ast.SetComp)
+
+
+def annotation_name(ann: ast.AST | None, sf: SourceFile) -> str | None:
+    """Dotted name of a (possibly subscripted / string) annotation:
+    `jax.Array` -> "jax.Array", `list[int]` -> "list", "'SearchParams'" ->
+    "SearchParams"."""
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        try:
+            ann = ast.parse(ann.value, mode="eval").body
+        except SyntaxError:
+            return None
+    if isinstance(ann, ast.Subscript):
+        ann = ann.value
+    if isinstance(ann, (ast.Name, ast.Attribute)):
+        return sf.resolve(ann)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Suppression baseline
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Baseline:
+    """Parsed analysis_baseline.txt: accepted findings with justifications.
+
+    Format (one entry per line, # comments and blanks ignored):
+
+        RULE  path::symbol  justification text...
+
+    Keys are (rule, path, symbol) -- line-number-free so entries survive
+    unrelated edits.  A matching finding is downgraded to suppressed; an
+    entry that matches nothing is reported stale (the file cannot rot)."""
+
+    entries: dict[tuple[str, str, str], str] = field(default_factory=dict)
+    path: str | None = None
+
+    @classmethod
+    def parse(cls, text: str, path: str | None = None) -> "Baseline":
+        entries: dict[tuple[str, str, str], str] = {}
+        for i, line in enumerate(text.splitlines(), 1):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = line.split(None, 2)
+            if len(parts) < 3 or "::" not in parts[1]:
+                raise ValueError(
+                    f"{path or '<baseline>'}:{i}: malformed entry {line!r}; "
+                    "expected 'RULE path::symbol justification'"
+                )
+            rule, loc, justification = parts
+            fpath, _, symbol = loc.partition("::")
+            if not justification.strip():
+                raise ValueError(
+                    f"{path or '<baseline>'}:{i}: entry {rule} {loc} has no "
+                    "justification -- every suppression must say why"
+                )
+            entries[(rule, fpath, symbol)] = justification.strip()
+        return cls(entries=entries, path=path)
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        return cls.parse(path.read_text(), str(path))
+
+    def split(self, findings: list[Finding]):
+        """(kept, suppressed, stale_keys): partition findings against the
+        baseline and report entries that matched nothing."""
+        kept, suppressed = [], []
+        hit: set[tuple[str, str, str]] = set()
+        for f in findings:
+            if f.key() in self.entries:
+                hit.add(f.key())
+                suppressed.append(
+                    replace(f, severity=NOTE,
+                            message=(f"{f.message} [suppressed: "
+                                     f"{self.entries[f.key()]}]"))
+                )
+            else:
+                kept.append(f)
+        stale = [k for k in self.entries if k not in hit]
+        return kept, suppressed, stale

@@ -1,0 +1,344 @@
+"""Pallas kernel-constraint checker.
+
+Every `kernels/<name>/` package carries a structural contract (DESIGN.md
+§3.1): a `ref.py` pure-jnp oracle with identical outputs, an `ops.py` public
+wrapper that threads an `interpret` fallback so the kernel is exact on CPU,
+and `pallas_call` BlockSpecs whose index_maps are pure functions of the grid
+position (closing over mutable state would make the compiled pipeline
+schedule depend on host mutation).  This pass checks all of that statically,
+and turns the prose VMEM-residency bounds ("csa_probe needs n <= ~30k at
+m = 64") into a computed diagnostic.
+
+Rules
+-----
+KC001  kernel package has no ref.py oracle                     (error)
+KC002  kernel package has no ops.py, or its ops.py never       (error)
+       threads an `interpret` fallback
+KC003  BlockSpec index_map is impure: closes over `self`, a    (error)
+       mutable module global, or calls a non-whitelisted
+       function
+KC004  symbolic VMEM-residency estimate for a pallas_call      (note)
+
+The VMEM model (KC004): each BlockSpec block is `4 bytes x prod(shape)`
+(int32/float32 lanes -- every kernel in this repo), doubled when the
+index_map depends on the grid position (the Pallas pipeline double-buffers
+revolving blocks; a constant index_map is fetched once and stays resident).
+Block shapes are read symbolically -- `(n, 2 * m)` becomes the monomial
+`2*m*n` -- and the per-call total is a polynomial over the enclosing
+function's dim names.  When `n` appears, the note also solves
+`poly(n) <= 16 MiB` with every other symbol bound to 64 (the repo's
+default hash width), which reproduces the csa_probe `n <~ 30k` bound as
+arithmetic instead of a comment.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .common import ERROR, MUTABLE_LITERALS, NOTE, Finding, SourceFile
+
+PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+BLOCK_SPEC = "jax.experimental.pallas.BlockSpec"
+VMEM_BUDGET = 16 * 2**20  # bytes per TPU core
+ELEM_BYTES = 4  # int32 / float32 lanes throughout this repo
+DEFAULT_DIM = 64  # binding for non-`n` symbols when solving the n-bound
+
+# calls an index_map may make and stay pure
+PURE_INDEX_CALLS = {"min", "max", "divmod", "abs", "len"}
+
+
+# ---------------------------------------------------------------------------
+# Tiny symbolic polynomials: {sorted symbol tuple: coeff}
+# ---------------------------------------------------------------------------
+
+Poly = dict
+
+
+def _p_const(c: int) -> Poly:
+    return {(): c} if c else {}
+
+
+def _p_add(a: Poly, b: Poly) -> Poly:
+    out = dict(a)
+    for mono, c in b.items():
+        out[mono] = out.get(mono, 0) + c
+        if out[mono] == 0:
+            del out[mono]
+    return out
+
+
+def _p_scale(a: Poly, k: int) -> Poly:
+    return {m: c * k for m, c in a.items()} if k else {}
+
+
+def _p_mul(a: Poly, b: Poly) -> Poly:
+    out: Poly = {}
+    for ma, ca in a.items():
+        for mb, cb in b.items():
+            mono = tuple(sorted(ma + mb))
+            out[mono] = out.get(mono, 0) + ca * cb
+    return out
+
+
+def parse_poly(node: ast.AST) -> Poly | None:
+    """Shape-dim expression -> polynomial; None when not polynomial."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return _p_const(node.value)
+    if isinstance(node, ast.Name):
+        return {(node.id,): 1}
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        inner = parse_poly(node.operand)
+        return None if inner is None else _p_scale(inner, -1)
+    if isinstance(node, ast.BinOp):
+        left, right = parse_poly(node.left), parse_poly(node.right)
+        if left is None or right is None:
+            return None
+        if isinstance(node.op, ast.Add):
+            return _p_add(left, right)
+        if isinstance(node.op, ast.Sub):
+            return _p_add(left, _p_scale(right, -1))
+        if isinstance(node.op, ast.Mult):
+            return _p_mul(left, right)
+    return None
+
+
+def poly_str(p: Poly) -> str:
+    if not p:
+        return "0"
+    parts = []
+    for mono in sorted(p, key=lambda m: (-len(m), m)):
+        c = p[mono]
+        term = "*".join((str(c),) + mono if c != 1 or not mono else mono)
+        parts.append(term)
+    return " + ".join(parts)
+
+
+def poly_symbols(p: Poly) -> set:
+    return {s for mono in p for s in mono}
+
+
+def poly_eval(p: Poly, env: dict) -> int:
+    total = 0
+    for mono, c in p.items():
+        v = c
+        for s in mono:
+            v *= env[s]
+        total += v
+    return total
+
+
+def solve_linear_bound(p: Poly, var: str, budget: int,
+                       default: int = DEFAULT_DIM) -> int | None:
+    """Largest `var` with poly <= budget, other symbols bound to `default`.
+    None when poly is not linear in `var` or has no `var` dependence."""
+    slope = 0
+    const = 0
+    for mono, c in p.items():
+        deg = mono.count(var)
+        if deg > 1:
+            return None
+        v = c
+        for s in mono:
+            if s != var:
+                v *= default
+        if deg == 1:
+            slope += v
+        else:
+            const += v
+    if slope <= 0:
+        return None
+    return (budget - const) // slope
+
+
+# ---------------------------------------------------------------------------
+# Package-structure checks (KC001 / KC002)
+# ---------------------------------------------------------------------------
+
+def _kernel_packages(sources: list[SourceFile]) -> dict:
+    """Group sources by kernel package: 'kernels/<pkg>' -> {filename: sf}."""
+    pkgs: dict = {}
+    for sf in sources:
+        parts = sf.path.split("/")
+        if "kernels" not in parts[:-1]:
+            continue
+        i = parts.index("kernels")
+        if len(parts) < i + 3:
+            continue  # kernels/common.py etc. -- not a package
+        pkg = "/".join(parts[: i + 2])
+        pkgs.setdefault(pkg, {})[parts[-1]] = sf
+    return pkgs
+
+
+def _structure_findings(sources: list[SourceFile]) -> Iterator[Finding]:
+    for pkg, files in sorted(_kernel_packages(sources).items()):
+        anchor = next(iter(files.values()))
+        name = pkg.rsplit("/", 1)[-1]
+        symbol = "<package>"
+        if "ref.py" not in files:
+            yield Finding(
+                "KC001", ERROR, f"{pkg}/ref.py", 0, symbol,
+                f"kernel package `{name}` has no ref.py oracle: every "
+                "pallas kernel needs a pure-jnp reference with identical "
+                "outputs (tested under interpret mode)",
+            )
+        if "ops.py" not in files:
+            yield Finding(
+                "KC002", ERROR, f"{pkg}/ops.py", 0, symbol,
+                f"kernel package `{name}` has no ops.py wrapper: the "
+                "public surface must thread an `interpret` fallback",
+            )
+        elif "interpret" not in files["ops.py"].text:
+            yield files["ops.py"].finding(
+                "KC002", ERROR, files["ops.py"].tree,
+                f"`{name}/ops.py` never references `interpret`: the wrapper "
+                "must thread the interpret fallback (kernels.common."
+                "default_interpret) so the kernel is exact off-TPU",
+            )
+        del anchor
+
+
+# ---------------------------------------------------------------------------
+# pallas_call inspection (KC003 / KC004)
+# ---------------------------------------------------------------------------
+
+def _mutable_globals(sf: SourceFile) -> set:
+    """Module-level names bound to mutable literals."""
+    out = set()
+    for stmt in sf.tree.body:
+        if isinstance(stmt, ast.Assign) and isinstance(stmt.value,
+                                                       MUTABLE_LITERALS):
+            out |= {t.id for t in stmt.targets if isinstance(t, ast.Name)}
+    return out
+
+
+def _index_map_impurity(fn: ast.AST, sf: SourceFile,
+                        mutable_globals: set) -> str | None:
+    """Reason an index_map is impure, or None when it looks pure."""
+    if isinstance(fn, ast.Lambda):
+        params = {a.arg for a in fn.args.args + fn.args.posonlyargs
+                  + fn.args.kwonlyargs}
+        body: list[ast.AST] = [fn.body]
+    elif isinstance(fn, ast.Name):
+        # a named index_map: resolve a module-level def when we can see it
+        for stmt in ast.walk(sf.tree):
+            if (isinstance(stmt, ast.FunctionDef)
+                    and stmt.name == fn.id):
+                params = {a.arg for a in stmt.args.args
+                          + stmt.args.posonlyargs + stmt.args.kwonlyargs}
+                body = list(stmt.body)
+                break
+        else:
+            return None  # imported/opaque: out of scope
+    else:
+        return None
+    for node in body:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and sub.id == "self":
+                return "closes over `self` (instance state)"
+            if isinstance(sub, ast.Name) and sub.id in mutable_globals:
+                return f"references mutable module global `{sub.id}`"
+            if isinstance(sub, ast.Call):
+                callee = sf.resolve(sub.func)
+                if isinstance(sub.func, ast.Name) and (
+                        sub.func.id in params):
+                    continue  # calling a passed-in ref accessor is fine
+                if callee is None or callee.split(".")[-1] \
+                        not in PURE_INDEX_CALLS:
+                    return (f"calls `{ast.unparse(sub.func)}` -- index_maps "
+                            "must be closed-form in the grid position")
+    return None
+
+
+def _index_map_grid_dependent(fn: ast.AST) -> bool:
+    """True when the index_map reads any of its parameters: the block
+    revolves with the grid, so the pipeline double-buffers it."""
+    if not isinstance(fn, ast.Lambda):
+        return True  # named/opaque: assume revolving (conservative 2x)
+    params = {a.arg for a in fn.args.args + fn.args.posonlyargs
+              + fn.args.kwonlyargs}
+    return any(isinstance(sub, ast.Name) and sub.id in params
+               for sub in ast.walk(fn.body))
+
+
+def _block_specs(call: ast.Call, sf: SourceFile) -> list:
+    """All (shape_tuple, index_map, spec_node) triples reachable from a
+    pallas_call: direct in_specs/out_specs kwargs plus those nested in a
+    grid_spec=...(...) construction."""
+    out = []
+
+    def collect(kwlist):
+        for kw in kwlist:
+            if kw.arg not in ("in_specs", "out_specs"):
+                continue
+            if not isinstance(kw.value, (ast.List, ast.Tuple)):
+                continue
+            for spec in kw.value.elts:
+                if not (isinstance(spec, ast.Call)
+                        and sf.resolve(spec.func) == BLOCK_SPEC):
+                    continue
+                shape = spec.args[0] if spec.args else None
+                imap = spec.args[1] if len(spec.args) > 1 else None
+                for skw in spec.keywords:
+                    if skw.arg in ("block_shape",):
+                        shape = skw.value
+                    if skw.arg == "index_map":
+                        imap = skw.value
+                out.append((shape, imap, spec))
+
+    collect(call.keywords)
+    for kw in call.keywords:
+        if kw.arg == "grid_spec" and isinstance(kw.value, ast.Call):
+            collect(kw.value.keywords)
+    return out
+
+
+def _vmem_poly(specs: list) -> Poly | None:
+    """Total VMEM-resident bytes as a polynomial, or None when any block
+    shape is not statically polynomial."""
+    total: Poly = {}
+    for shape, imap, _spec in specs:
+        if not isinstance(shape, (ast.Tuple, ast.List)):
+            return None
+        block: Poly = _p_const(1)
+        for dim in shape.elts:
+            p = parse_poly(dim)
+            if p is None:
+                return None
+            block = _p_mul(block, p)
+        factor = 2 if (imap is None or _index_map_grid_dependent(imap)) else 1
+        total = _p_add(total, _p_scale(block, ELEM_BYTES * factor))
+    return total
+
+
+def _pallas_findings(sf: SourceFile) -> Iterator[Finding]:
+    mutable_globals = _mutable_globals(sf)
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Call)
+                and sf.resolve(node.func) == PALLAS_CALL):
+            continue
+        specs = _block_specs(node, sf)
+        for _shape, imap, spec in specs:
+            if imap is None:
+                continue
+            reason = _index_map_impurity(imap, sf, mutable_globals)
+            if reason:
+                yield sf.finding(
+                    "KC003", ERROR, spec,
+                    f"impure BlockSpec index_map: {reason}",
+                )
+        if specs:
+            poly = _vmem_poly(specs)
+            if poly is not None:
+                msg = (f"VMEM-resident estimate: {poly_str(poly)} bytes "
+                       "(revolving blocks double-buffered)")
+                bound = solve_linear_bound(poly, "n", VMEM_BUDGET)
+                if bound is not None:
+                    msg += (f"; with non-n dims = {DEFAULT_DIM}, the "
+                            f"16 MiB budget bounds n <= {bound}")
+                yield sf.finding("KC004", NOTE, node, msg)
+
+
+def run(sources: list[SourceFile]) -> Iterator[Finding]:
+    yield from _structure_findings(sources)
+    for sf in sources:
+        yield from _pallas_findings(sf)

@@ -1,0 +1,207 @@
+"""Pytree-registration checker.
+
+`exec.execute` flattens the index/params pytree to build its plan key, and
+every jitted stage closes over index leaves -- so a dataclass carrying
+`jax.Array` fields that reaches that path *must* be registered with
+`jax.tree_util.register_dataclass`, and its `meta_fields` (the static aux
+data that keys the jit cache) must be hashable.  An unregistered dataclass
+is a leaf: jit treats the whole object as a constant, silently retracing per
+instance; an unhashable meta field raises at dispatch.
+
+Rules
+-----
+PT001  dataclass with jax.Array fields never registered as a pytree (error)
+PT002  registered meta field has an unhashable annotation            (error)
+PT003  registered meta field has a mutable default                   (warning)
+
+Registration is recognized in both repo forms: the direct
+`register_dataclass(Cls, data_fields=..., meta_fields=[...])` call, and the
+loop form used for families/stores::
+
+    for _cls, _data, _meta in ((A, (...), (...)), ...):
+        jax.tree_util.register_dataclass(_cls, ...)
+
+NamedTuple subclasses are pytrees already and exempt.  Host-side dataclasses
+that never enter a trace (baseline methods and the like) are exactly what
+the suppression baseline is for -- suppress with a justification rather than
+registering types that never need it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .common import (ERROR, MUTABLE_LITERALS, WARNING, Finding, SourceFile,
+                     annotation_name, is_dataclass_decorated)
+
+REGISTER = "jax.tree_util.register_dataclass"
+ARRAY_ANNOTATIONS = {"jax.Array", "jnp.ndarray", "jax.numpy.ndarray"}
+UNHASHABLE_ANNOTATIONS = {
+    "list", "dict", "set", "bytearray", "typing.List", "typing.Dict",
+    "typing.Set", "List", "Dict", "Set",
+} | ARRAY_ANNOTATIONS  # arrays are unhashable too: never a meta field
+NAMEDTUPLE_BASES = {"NamedTuple", "typing.NamedTuple"}
+
+
+def _strings_in(node: ast.AST | None) -> list[str] | None:
+    """String elements of a (possibly `list(...)`-wrapped) literal."""
+    if node is None:
+        return None
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in ("list", "tuple") and node.args):
+        node = node.args[0]
+    if isinstance(node, (ast.List, ast.Tuple)):
+        out = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, str)):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+def _loop_bindings(sf: SourceFile, name_node: ast.Name) -> list[dict]:
+    """For a register_dataclass first arg that is a for-loop variable,
+    return one {target name: bound AST node} dict per iteration, read off
+    the loop's literal iterable.  Empty when not that shape."""
+    cur = sf.parent(name_node)
+    loop = None
+    while cur is not None:
+        if isinstance(cur, ast.For):
+            loop = cur
+            break
+        cur = sf.parent(cur)
+    if loop is None or not isinstance(loop.iter, (ast.Tuple, ast.List)):
+        return []
+    if isinstance(loop.target, ast.Name):
+        names = [loop.target.id]
+    elif isinstance(loop.target, ast.Tuple):
+        names = [t.id for t in loop.target.elts if isinstance(t, ast.Name)]
+        if len(names) != len(loop.target.elts):
+            return []
+    else:
+        return []
+    bindings = []
+    for item in loop.iter.elts:
+        if len(names) == 1:
+            bindings.append({names[0]: item})
+        elif isinstance(item, (ast.Tuple, ast.List)) \
+                and len(item.elts) == len(names):
+            bindings.append(dict(zip(names, item.elts)))
+    return bindings
+
+
+def _registrations(sources: list[SourceFile]) -> dict[str, list[str] | None]:
+    """Registered class name -> meta field names (None when not literal)."""
+    reg: dict[str, list[str] | None] = {}
+    for sf in sources:
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Call)
+                    and sf.resolve(node.func) == REGISTER and node.args):
+                continue
+            meta_node = None
+            for kw in node.keywords:
+                if kw.arg == "meta_fields":
+                    meta_node = kw.value
+            if len(node.args) > 2:
+                meta_node = node.args[2]
+            cls = node.args[0]
+            if isinstance(cls, ast.Name):
+                bindings = _loop_bindings(sf, cls)
+                if bindings:
+                    for env in bindings:
+                        bound_cls = env.get(cls.id)
+                        if not isinstance(bound_cls, ast.Name):
+                            continue
+                        bound_meta = meta_node
+                        if (isinstance(meta_node, ast.Name)
+                                and meta_node.id in env):
+                            bound_meta = env[meta_node.id]
+                        elif (isinstance(meta_node, ast.Call)
+                                and isinstance(meta_node.func, ast.Name)
+                                and meta_node.func.id in ("list", "tuple")
+                                and meta_node.args
+                                and isinstance(meta_node.args[0], ast.Name)
+                                and meta_node.args[0].id in env):
+                            bound_meta = env[meta_node.args[0].id]
+                        reg[bound_cls.id] = _strings_in(bound_meta)
+                else:
+                    reg[cls.id] = _strings_in(meta_node)
+    return reg
+
+
+def _class_fields(node: ast.ClassDef) -> dict[str, ast.AnnAssign]:
+    return {
+        stmt.target.id: stmt
+        for stmt in node.body
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name)
+    }
+
+
+def _mutable_default(stmt: ast.AnnAssign, sf: SourceFile) -> bool:
+    if stmt.value is None:
+        return False
+    if isinstance(stmt.value, MUTABLE_LITERALS):
+        return True
+    if isinstance(stmt.value, ast.Call):
+        callee = sf.resolve(stmt.value.func)
+        if callee in ("field", "dataclasses.field"):
+            for kw in stmt.value.keywords:
+                if (kw.arg == "default_factory"
+                        and isinstance(kw.value, ast.Name)
+                        and kw.value.id in ("list", "dict", "set")):
+                    return True
+    return False
+
+
+def run(sources: list[SourceFile]) -> Iterator[Finding]:
+    registered = _registrations(sources)
+    for sf in sources:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            is_dc, _frozen = is_dataclass_decorated(node, sf)
+            if not is_dc:
+                continue
+            base_names = {sf.resolve(b) for b in node.bases}
+            if base_names & NAMEDTUPLE_BASES:
+                continue  # already a pytree
+            fields = _class_fields(node)
+            has_array = any(
+                annotation_name(f.annotation, sf) in ARRAY_ANNOTATIONS
+                for f in fields.values()
+            )
+            inherits_registered = bool(
+                {b.id for b in node.bases if isinstance(b, ast.Name)}
+                & registered.keys()
+            )
+            if node.name not in registered:
+                if has_array and not inherits_registered:
+                    yield sf.finding(
+                        "PT001", ERROR, node,
+                        f"dataclass `{node.name}` carries jax.Array fields "
+                        "but is never registered with jax.tree_util."
+                        "register_dataclass: jit treats instances as opaque "
+                        "constants and silently retraces per object",
+                    )
+                continue
+            meta = registered[node.name] or []
+            for fname in meta:
+                stmt = fields.get(fname)
+                if stmt is None:
+                    continue  # inherited or dynamic -- out of scope
+                ann = annotation_name(stmt.annotation, sf)
+                if ann in UNHASHABLE_ANNOTATIONS:
+                    yield sf.finding(
+                        "PT002", ERROR, stmt,
+                        f"meta field `{node.name}.{fname}` is annotated "
+                        f"`{ann}`, which is unhashable: meta fields key the "
+                        "jit cache and must hash",
+                    )
+                if _mutable_default(stmt, sf):
+                    yield sf.finding(
+                        "PT003", WARNING, stmt,
+                        f"meta field `{node.name}.{fname}` has a mutable "
+                        "default: shared across instances and aliasable "
+                        "into the jit cache key",
+                    )

@@ -1,0 +1,209 @@
+"""Lock-discipline race detector: the `# guarded-by:` annotation convention.
+
+Shared mutable attributes are annotated where they are created:
+
+    self._vals = deque(maxlen=maxlen)   # guarded-by: _lock
+
+declares that every later read or write of ``self._vals`` -- in this class
+or a same-module subclass -- must occur lexically inside a
+``with self._lock:`` block (a `threading.Condition` works identically:
+``# guarded-by: _cv``).  Helper methods that are documented to run with the
+lock already held by their caller are annotated on their `def` line:
+
+    def _get(self, key):   # holds: _lock
+
+which makes their accesses count as guarded (and shifts the proof obligation
+to their callers, which the annotated call sites cover).
+
+This is the pass that turns the PR-8 `LatencyWindow` bug -- `record()`
+appending to the percentile deque without the lock the snapshot readers
+take -- into a permanent lint-time regression: reverting that lock makes
+GB002 fire on the exact line.
+
+Rules
+-----
+GB001  unguarded write of an annotated attribute          (error)
+GB002  unguarded read of an annotated attribute           (error)
+GB003  annotation names a lock the class never creates    (error)
+
+Scope limits (by design): `__init__` is exempt (construction is
+single-threaded -- the object is not yet shared); nested functions and
+lambdas do not inherit the enclosing `with` (a closure can outlive the lock
+scope); only lexical containment is checked, so a lock taken by a helper the
+caller invokes does not count -- annotate the helper with `# holds:`.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Iterator
+
+from .common import ERROR, Finding, SourceFile
+
+GUARDED_BY = "guarded-by:"
+HOLDS = "holds:"
+
+
+@dataclass
+class _ClassInfo:
+    node: ast.ClassDef
+    bases: list[str]
+    guarded: dict[str, str] = field(default_factory=dict)  # attr -> lock
+    created: set[str] = field(default_factory=set)  # attrs assigned anywhere
+    ann_lines: dict[str, int] = field(default_factory=dict)  # attr -> lineno
+
+
+def _parse_marker(comment: str, marker: str) -> str | None:
+    """Extract the value of `# <marker> <value>` from a comment string."""
+    if marker not in comment:
+        return None
+    val = comment.split(marker, 1)[1].strip()
+    return val.split()[0] if val else None
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    """The attribute name of a `self.<attr>` access, else None."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _collect_classes(sf: SourceFile) -> dict[str, _ClassInfo]:
+    classes: dict[str, _ClassInfo] = {}
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        info = _ClassInfo(
+            node=node,
+            bases=[b.id for b in node.bases if isinstance(b, ast.Name)],
+        )
+        for sub in ast.walk(node):
+            attr = None
+            if isinstance(sub, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = (sub.targets if isinstance(sub, ast.Assign)
+                           else [sub.target])
+                for t in targets:
+                    attr = _self_attr(t)
+                    if attr:
+                        info.created.add(attr)
+                        lock = _parse_marker(sf.comment_on(sub), GUARDED_BY)
+                        if lock:
+                            info.guarded[attr] = lock
+                            info.ann_lines[attr] = sub.lineno
+        classes[node.name] = info
+    return classes
+
+
+def _effective_guards(info: _ClassInfo,
+                      classes: dict[str, _ClassInfo]) -> dict[str, str]:
+    """This class's guarded attrs, base-class annotations included (same
+    module only -- the annotation travels with the attribute's creation)."""
+    guards: dict[str, str] = {}
+    for base in info.bases:
+        if base in classes:
+            guards.update(_effective_guards(classes[base], classes))
+    guards.update(info.guarded)
+    return guards
+
+
+def _with_locks(item: ast.withitem) -> str | None:
+    """The lock attr name a withitem acquires: `with self._lock:` /
+    `with self._cv:` -> "_lock" / "_cv"."""
+    return _self_attr(item.context_expr)
+
+
+class _MethodChecker(ast.NodeVisitor):
+    """Walk one method body tracking the lexically-held lock set."""
+
+    def __init__(self, sf: SourceFile, guards: dict[str, str],
+                 held: set[str]):
+        self.sf = sf
+        self.guards = guards
+        self.held = held
+        self.findings: list[Finding] = []
+
+    def visit_With(self, node: ast.With) -> None:
+        acquired = {lk for item in node.items
+                    if (lk := _with_locks(item)) is not None} - self.held
+        self.held |= acquired
+        for stmt in node.body:
+            self.visit(stmt)
+        self.held -= acquired
+        # re-visit items for accesses inside the context expressions
+        for item in node.items:
+            self.visit(item.context_expr)
+
+    # a nested def/lambda may escape the enclosing `with`: its body is
+    # checked with an empty lock set (conservative: escapes are the norm
+    # for worker thunks)
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        _MethodChecker(self.sf, self.guards, set()).check_body(
+            node.body, self.findings)
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        sub = _MethodChecker(self.sf, self.guards, set())
+        sub.visit(node.body)
+        self.findings.extend(sub.findings)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        attr = _self_attr(node)
+        if attr in self.guards and self.guards[attr] not in self.held:
+            write = isinstance(node.ctx, (ast.Store, ast.Del))
+            rule = "GB001" if write else "GB002"
+            kind = "write to" if write else "read of"
+            self.findings.append(self.sf.finding(
+                rule, ERROR, node,
+                f"unguarded {kind} `self.{attr}` (guarded-by: "
+                f"{self.guards[attr]}): not lexically inside `with "
+                f"self.{self.guards[attr]}:`",
+            ))
+        self.generic_visit(node)
+
+    def check_body(self, body: list[ast.stmt],
+                   out: list[Finding]) -> None:
+        for stmt in body:
+            self.visit(stmt)
+        out.extend(self.findings)
+
+
+def run(sources: list[SourceFile]) -> Iterator[Finding]:
+    for sf in sources:
+        classes = _collect_classes(sf)
+        for info in classes.values():
+            guards = _effective_guards(info, classes)
+            if not guards:
+                continue
+            # GB003: the named lock must exist somewhere in the hierarchy
+            created: set[str] = set(info.created)
+            stack = list(info.bases)
+            while stack:
+                b = stack.pop()
+                if b in classes:
+                    created |= classes[b].created
+                    stack.extend(classes[b].bases)
+            for attr, lock in info.guarded.items():
+                if lock not in created:
+                    yield sf.finding(
+                        "GB003", ERROR, info.node,
+                        f"`{attr}` is annotated guarded-by: {lock}, but "
+                        f"`self.{lock}` is never created in "
+                        f"{info.node.name} or its bases",
+                    )
+            for stmt in info.node.body:
+                if not isinstance(stmt, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if stmt.name == "__init__":
+                    continue  # construction: the object is not shared yet
+                held: set[str] = set()
+                holds = _parse_marker(sf.comment_on(stmt), HOLDS)
+                if holds:
+                    held.add(holds)
+                checker = _MethodChecker(sf, guards, held)
+                findings: list[Finding] = []
+                checker.check_body(stmt.body, findings)
+                yield from findings

@@ -1,7 +1,7 @@
 """Baseline ANN methods (paper §6.3) sharing repro.core's LSH families."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax

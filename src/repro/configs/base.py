@@ -3,8 +3,7 @@ the shape-cell definitions (train_4k / prefill_32k / decode_32k / long_500k).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,13 @@
 """Architecture registry: --arch <id> -> ModelConfig."""
 from __future__ import annotations
 
-from .base import ModelConfig, SHAPES, ShapeCell, cell_applicable, input_specs
+from .base import (  # noqa: F401  (re-exported config API surface)
+    ModelConfig,
+    SHAPES,
+    ShapeCell,
+    cell_applicable,
+    input_specs,
+)
 from .falcon_mamba_7b import CONFIG as falcon_mamba_7b
 from .gemma2_9b import CONFIG as gemma2_9b
 from .gemma3_1b import CONFIG as gemma3_1b

@@ -10,7 +10,7 @@ imports (`repro.core.verify_store`, `repro.core.rerank_rows`, the
 """
 from __future__ import annotations
 
-from repro.exec.stages import (
+from repro.exec.stages import (  # noqa: F401  (re-exported via repro.core)
     ENV_GATHER_KERNEL,
     rerank_rows,
     resolve_use_kernel,

@@ -159,7 +159,7 @@ class PlanCache:
         )
         # key -> (plan, builder scope): the scope rides along so an eviction
         # can be attributed to the caller whose compile it undoes
-        self._plans: OrderedDict[tuple, tuple[SearchPlan, str]] = OrderedDict()
+        self._plans: OrderedDict[tuple, tuple[SearchPlan, str]] = OrderedDict()  # guarded-by: _lock
         self._lock = threading.Lock()
 
     # -- registry-backed counter views ---------------------------------------
@@ -229,14 +229,15 @@ class PlanCache:
         return plan, False
 
     def __len__(self) -> int:
-        return len(self._plans)
+        with self._lock:
+            return len(self._plans)
 
     def stats(self) -> dict:
         return {
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
-            "size": len(self._plans),
+            "size": len(self),
             "scopes": self.scopes,
         }
 

@@ -31,7 +31,7 @@ from repro.launch.shardings import batch_specs, cache_specs, state_specs, to_nam
 from repro.models import api
 from repro.optim import cosine_schedule
 from repro.sharding import shard_ctx
-from repro.train.step import TrainState, init_train_state, make_train_step
+from repro.train.step import init_train_state, make_train_step
 
 
 def _sds(tree):

@@ -23,7 +23,6 @@ All quantities are per-device (the HLO is the post-SPMD partitioned module).
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 

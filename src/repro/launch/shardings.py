@@ -2,11 +2,10 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.sharding import param_specs
-from repro.sharding.specs import LOGICAL_RULES, _resolve
+from repro.sharding.specs import LOGICAL_RULES, _resolve  # noqa: F401  (re-export)
 
 
 def _bd(mesh: Mesh):

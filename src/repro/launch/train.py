@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro.configs import ARCHS
 from repro.data import DataPipeline, lm_token_batches

@@ -1,7 +1,6 @@
 """Unified model API dispatching decoder-LM / VLM / encoder-decoder."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from . import lm, whisper

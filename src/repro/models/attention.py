@@ -10,7 +10,6 @@ reduction over the sharded axis).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

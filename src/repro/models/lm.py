@@ -9,7 +9,6 @@ repeat, which is exactly the Zamba design.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -5,7 +5,6 @@ streams (t, h, w): patches get grid positions, text continues sequentially.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .lm import embed_tokens

@@ -7,7 +7,6 @@ positions; tied unembedding.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -20,10 +19,9 @@ from .attention import (
     attention_prefill,
     cross_attention,
     init_attn,
-    init_cache,
     project_ctx_kv,
 )
-from .common import dense_init, layer_norm, softmax_cross_entropy
+from .common import layer_norm, softmax_cross_entropy
 from .ffn import init_mlp, mlp_block
 
 

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import threading
 from collections import OrderedDict, deque
+from typing import Any
 
 # Prometheus-style default buckets, biased toward serving latencies in
 # seconds: 250us .. 10s covers an embed stage through a saturated queue.
@@ -57,7 +58,7 @@ class _Metric:
         self.help = help
         self.labelnames = tuple(labelnames)
         self._lock = threading.Lock()
-        self._series: dict[tuple, object] = {}
+        self._series: dict[tuple, Any] = {}  # guarded-by: _lock
 
     def _key(self, labels: dict) -> tuple:
         if set(labels) != set(self.labelnames):
@@ -67,7 +68,7 @@ class _Metric:
             )
         return tuple(str(labels[k]) for k in self.labelnames)
 
-    def _match(self, labels: dict) -> list[tuple]:
+    def _match(self, labels: dict) -> list[tuple]:  # holds: _lock
         """Series keys matching a *partial* label filter (read-side sugar:
         `value(name)` sums every series, `value(name, scope="x")` one)."""
         unknown = set(labels) - set(self.labelnames)
@@ -81,6 +82,12 @@ class _Metric:
             key for key in self._series
             if all(key[i] == str(labels[k]) for k, i in pos.items())
         ]
+
+    def match_keys(self, labels: dict) -> list[tuple]:
+        """Locked `_match` -- the entry point for external read-side
+        consumers (`Delta`) that do not hold the metric lock."""
+        with self._lock:
+            return self._match(labels)
 
     def labelsets(self) -> list[dict]:
         with self._lock:
@@ -160,7 +167,7 @@ class Histogram(_Metric):
         self.buckets = tuple(sorted(buckets))
         self.reservoir = reservoir
 
-    def _get(self, key: tuple) -> _HistSeries:
+    def _get(self, key: tuple) -> _HistSeries:  # holds: _lock
         s = self._series.get(key)
         if s is None:
             s = self._series[key] = _HistSeries(len(self.buckets) + 1,
@@ -254,7 +261,7 @@ class Delta:
         base = (self._snap.counters.get(name)
                 or self._snap.gauges.get(name) or {})
         cur = m.collect()
-        keys = m._match(labels)
+        keys = m.match_keys(labels)
         return float(sum(cur.get(k, 0.0) - base.get(k, 0.0) for k in keys))
 
     def samples(self, name: str, **labels) -> list[float]:
@@ -271,7 +278,7 @@ class Delta:
         m = self._reg.get(name)
         base = self._snap.hists.get(name, {})
         cur = m.collect()
-        keys = m._match(labels)
+        keys = m.match_keys(labels)
         return int(sum(cur.get(k, {"count": 0})["count"]
                        - base.get(k, {"count": 0})["count"] for k in keys))
 
@@ -283,7 +290,7 @@ class Registry:
     emitting different shapes under one name is the bug this raises on)."""
 
     def __init__(self):
-        self._metrics: OrderedDict[str, _Metric] = OrderedDict()
+        self._metrics: OrderedDict[str, _Metric] = OrderedDict()  # guarded-by: _lock
         self._lock = threading.Lock()
 
     def _declare(self, cls, name, help, labelnames, **kw) -> _Metric:

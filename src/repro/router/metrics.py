@@ -59,7 +59,7 @@ class LatencyWindow:
     monotone by design)."""
 
     def __init__(self, maxlen: int = 16384, label: str = "router"):
-        self._vals: deque[float] = deque(maxlen=maxlen)
+        self._vals: deque[float] = deque(maxlen=maxlen)  # guarded-by: _lock
         self._lock = threading.Lock()
         self.label = label
         self._hist = registry().histogram(

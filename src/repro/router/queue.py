@@ -109,14 +109,14 @@ class AdmissionQueue:
     def __init__(self, max_depth: int = 256, name: str = ""):
         self.max_depth = max_depth
         self.name = name
-        self._heap: list[tuple[float, int, Request]] = []
+        self._heap: list[tuple[float, int, Request]] = []  # guarded-by: _cv
         self._cv = threading.Condition()
-        self._seq = 0
-        self._closed = False
+        self._seq = 0  # guarded-by: _cv
+        self._closed = False  # guarded-by: _cv
         # EWMA per-request service time, fed back by the worker
         # (`note_service`); seeds both the retry-after estimate and the
         # deadline timer's slack reserve before any batch has completed
-        self._per_req_s = 0.005
+        self._per_req_s = 0.005  # guarded-by: _cv
 
     def depth(self) -> int:
         with self._cv:
@@ -124,7 +124,8 @@ class AdmissionQueue:
 
     @property
     def closed(self) -> bool:
-        return self._closed
+        with self._cv:
+            return self._closed
 
     def offer(self, req: Request) -> None:
         """Admit one request, or raise `QueueFull` at the depth bound."""

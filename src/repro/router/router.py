@@ -188,12 +188,12 @@ class Router:
             for n, e in zip(names, engines)
         ]
         self._lock = threading.Lock()
-        self._admitted = 0
-        self._rejected = 0
-        self._b_admitted = 0
-        self._b_rejected = 0
-        self._rr = 0
-        self._shutdown = False
+        self._admitted = 0  # guarded-by: _lock
+        self._rejected = 0  # guarded-by: _lock
+        self._b_admitted = 0  # guarded-by: _lock
+        self._b_rejected = 0  # guarded-by: _lock
+        self._rr = 0  # guarded-by: _lock
+        self._shutdown = False  # guarded-by: _lock
         reg = registry()
         self._c_admitted = reg.counter(
             "repro_router_admitted_total", "requests admitted to a queue")
@@ -241,8 +241,9 @@ class Router:
         the least-loaded replica queue (ties round-robin) and returns a
         `Ticket`; raises `QueueFull` with a retry-after hint when that
         queue is at its depth bound."""
-        if self._shutdown:
-            raise RuntimeError("router is shut down")
+        with self._lock:
+            if self._shutdown:
+                raise RuntimeError("router is shut down")
         tokens = np.asarray(tokens)
         if tokens.ndim != 1:
             raise ValueError(
@@ -326,7 +327,8 @@ class Router:
         """Stop admissions and join the workers.  With `drain=True` queued
         requests are served first (the workers' linger timers short-circuit
         once the queues close); otherwise they fail with RuntimeError."""
-        self._shutdown = True
+        with self._lock:
+            self._shutdown = True
         if not drain:
             for r in self.replicas:
                 r.queue.flush(RuntimeError(

@@ -8,7 +8,6 @@ bf16 copies transient inside the layer scan.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -13,8 +13,7 @@ from __future__ import annotations
 
 import signal
 import time
-from dataclasses import dataclass, field
-from pathlib import Path
+from dataclasses import dataclass
 
 import jax
 import numpy as np

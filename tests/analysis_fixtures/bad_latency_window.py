@@ -1,0 +1,25 @@
+"""BAD fixture: the PR-8 LatencyWindow race, preserved as a lint target.
+
+`record()` appends to the percentile deque WITHOUT the lock that `values()`
+takes -- a worker-thread `record` racing a snapshot `list(self._vals)` is
+exactly the bug PR 8 fixed.  The races pass must flag the append (GB002).
+"""
+import threading
+from collections import deque
+
+
+class LatencyWindow:
+    def __init__(self, maxlen: int = 16384):
+        self._vals = deque(maxlen=maxlen)  # guarded-by: _lock
+        self._lock = threading.Lock()
+
+    def record(self, seconds: float) -> None:
+        self._vals.append(seconds)  # BUG: no lock; races values()
+
+    def values(self) -> list:
+        with self._lock:
+            return list(self._vals)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._vals.clear()

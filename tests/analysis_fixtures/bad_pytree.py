@@ -1,0 +1,30 @@
+"""BAD fixture: pytree-registration hazards.
+
+`Probe` carries arrays but is never registered (PT001: jit sees an opaque
+constant and silently retraces per instance).  `Table` is registered but
+declares an unhashable meta field (PT002) and a mutable meta default
+(PT003) -- both poison the jit cache key.
+"""
+from dataclasses import dataclass, field
+
+import jax
+import jax.tree_util
+
+
+@dataclass
+class Probe:
+    h: jax.Array
+    shifts: jax.Array
+    metric: str = "euclidean"
+
+
+@dataclass
+class Table:
+    rows: jax.Array
+    names: list  # unhashable: cannot key the jit cache
+    tags: dict = field(default_factory=dict)
+
+
+jax.tree_util.register_dataclass(
+    Table, data_fields=["rows"], meta_fields=["names", "tags"]
+)

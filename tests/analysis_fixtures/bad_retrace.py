@@ -1,0 +1,44 @@
+"""BAD fixture: every retrace-hazard shape the RT rules cover.
+
+The silent-retrace shape PR 5/6 guard at runtime: Python branching on a
+traced value (RT001), host concretization inside a traced scope (RT002), a
+mutable literal in a static-arg position (RT003), and a mutable
+trace-config kwarg (RT004).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("ks",))
+def topk_sum(x: jax.Array, ks):
+    return sum(jnp.sort(x)[-k:].sum() for k in ks)
+
+
+def caller(x):
+    # RT003: list in a static position -- unhashable jit cache key
+    return topk_sum(x, ks=[1, 2, 3])
+
+
+def score(x: jax.Array, thresh: float):
+    if x.sum() > thresh:  # RT001: Python `if` on a traced value
+        return x * 2.0
+    return x
+
+
+@jax.jit
+def normalize(x):
+    scale = float(np.asarray(x).max())  # RT002 (np.asarray of a tracer)
+    return x / scale
+
+
+def stage_rerank(d: jax.Array) -> jax.Array:
+    best = d.min()
+    return d - best.item()  # RT002: .item() concretizes inside a pure stage
+
+
+def build(fn):
+    # RT004: mutable literal for a trace-config kwarg
+    return jax.jit(fn, static_argnames=["k"])

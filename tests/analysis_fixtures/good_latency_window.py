@@ -1,0 +1,24 @@
+"""GOOD fixture: the fixed LatencyWindow -- every `_vals` touch locked."""
+import threading
+from collections import deque
+
+
+class LatencyWindow:
+    def __init__(self, maxlen: int = 16384):
+        self._vals = deque(maxlen=maxlen)  # guarded-by: _lock
+        self._lock = threading.Lock()
+
+    def record(self, seconds: float) -> None:
+        with self._lock:
+            self._vals.append(seconds)
+
+    def values(self) -> list:
+        with self._lock:
+            return list(self._vals)
+
+    def _drop_oldest(self) -> None:  # holds: _lock
+        self._vals.popleft()
+
+    def trim(self) -> None:
+        with self._lock:
+            self._drop_oldest()

@@ -1,0 +1,41 @@
+"""GOOD fixture: the same structures registered the safe way -- including
+the loop-registration form the families/stores modules use."""
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.tree_util
+
+
+@dataclass
+class Probe:
+    h: jax.Array
+    shifts: jax.Array
+    metric: str = "euclidean"
+
+
+@dataclass
+class Table:
+    rows: jax.Array
+    names: tuple = ()
+
+
+class Span(NamedTuple):  # NamedTuple: a pytree already
+    lo: jax.Array
+    hi: jax.Array
+
+
+@dataclass
+class HostConfig:  # no array fields: never needs registration
+    name: str = ""
+    depth: int = 4
+
+
+jax.tree_util.register_dataclass(
+    Probe, data_fields=["h", "shifts"], meta_fields=["metric"]
+)
+
+for _cls, _data, _meta in ((Table, ("rows",), ("names",)),):
+    jax.tree_util.register_dataclass(
+        _cls, data_fields=list(_data), meta_fields=list(_meta)
+    )

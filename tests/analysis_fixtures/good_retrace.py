@@ -1,0 +1,36 @@
+"""GOOD fixture: the same shapes written the retrace-safe way."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("ks",))
+def topk_sum(x: jax.Array, ks):
+    return sum(jnp.sort(x)[-k:].sum() for k in ks)
+
+
+def caller(x):
+    return topk_sum(x, ks=(1, 2, 3))  # tuple: hashable static arg
+
+
+def score(x: jax.Array, thresh: float) -> jax.Array:
+    return jnp.where(x.sum() > thresh, x * 2.0, x)  # traced select
+
+
+def shape_switch(x: jax.Array) -> jax.Array:
+    if x.ndim == 1:  # static: shape metadata, not the traced value
+        x = x[None, :]
+    if len(x) == 0:
+        return x
+    return x
+
+
+def stage_rerank(d: jax.Array, tail: "jax.Array | None" = None) -> jax.Array:
+    if tail is None:  # static plan-shape switch
+        return d - d.min()
+    return d - tail.min()
+
+
+def build(fn):
+    return jax.jit(fn, static_argnames=("k",))

@@ -1,0 +1,1 @@
+from .badk import scale  # noqa: F401

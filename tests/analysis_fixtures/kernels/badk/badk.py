@@ -1,0 +1,28 @@
+"""BAD kernel package: no ref.py oracle (KC001), no ops.py wrapper (KC002),
+and impure BlockSpec index_maps (KC003)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+OFFSETS = []  # mutable module global -- an index_map must not read this
+
+
+def _lookup(r):
+    return OFFSETS[r]
+
+
+def _kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def scale(x: jax.Array, n: int):
+    return pl.pallas_call(
+        _kern,
+        grid=(4,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda r: (OFFSETS[r], 0)),
+            pl.BlockSpec((1, n), lambda r: (_lookup(r), 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, n), lambda r: (r, 0))],
+        out_shape=[jax.ShapeDtypeStruct((4, n), jnp.float32)],
+    )(x)

@@ -1,0 +1,3 @@
+from .goodk import fused  # noqa: F401
+from .ops import fused_op  # noqa: F401
+from .ref import fused_ref  # noqa: F401

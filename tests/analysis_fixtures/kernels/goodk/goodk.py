@@ -1,0 +1,27 @@
+"""GOOD kernel package: ref.py + ops.py with interpret fallback, pure
+index_maps.  The KC004 VMEM note is expected (it is a diagnostic, not an
+error): revolving (1, n) blocks double-buffer, the constant-index (n, 2*m)
+block stays resident once."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kern(x_ref, h_ref, o_ref):
+    o_ref[...] = x_ref[...] + h_ref[0, 0]
+
+
+def fused(x: jax.Array, h: jax.Array, *, interpret: bool = True):
+    n = x.shape[1]
+    m = h.shape[1] // 2
+    return pl.pallas_call(
+        _kern,
+        grid=(4,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda r: (r, 0)),
+            pl.BlockSpec((n, 2 * m), lambda r: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, n), lambda r: (r, 0))],
+        out_shape=[jax.ShapeDtypeStruct((4, n), jnp.float32)],
+        interpret=interpret,
+    )(x, h)

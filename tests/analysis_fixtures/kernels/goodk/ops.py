@@ -1,0 +1,6 @@
+"""Public wrapper threading the interpret fallback."""
+from .goodk import fused
+
+
+def fused_op(x, h, *, interpret: bool = True):
+    return fused(x, h, interpret=interpret)

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle with outputs identical to the pallas path."""
+import jax.numpy as jnp
+
+
+def fused_ref(x, h):
+    return x + jnp.broadcast_to(h[0, 0], x.shape)

@@ -1,0 +1,404 @@
+"""Tests for repro.analysis: the static-analysis suite gating CI.
+
+Three layers:
+
+  * pass-level: each pass against the paired good/bad fixtures under
+    tests/analysis_fixtures/, asserting the exact rule ids fire (and that
+    the good twins stay silent).  The bad fixtures reproduce the two
+    historical bug shapes -- the PR-8 LatencyWindow record/percentiles race
+    and the silent-retrace hazards the PlanCache audits at runtime.
+  * regression: reverting the LatencyWindow lock in the *real*
+    router/metrics.py source must re-raise the race as an error.
+  * CLI-level: `python -m repro.analysis --strict` exits 0 on HEAD and
+    nonzero on each bad fixture.
+
+Everything here is host-only: no jax import, no device init (the fixtures
+import jax, but they are parsed, never executed).
+"""
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import PASSES, analyze_source, run_passes
+from repro.analysis.common import ERROR, Baseline, SourceFile
+from repro.analysis.kernels import (
+    VMEM_BUDGET,
+    parse_poly,
+    poly_str,
+    solve_linear_bound,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+
+
+def analyze_file(name: str, passes=None, path: str | None = None):
+    text = (FIXTURES / name).read_text()
+    return analyze_source(text, path or name, passes)
+
+
+def rules(findings) -> set:
+    return {f.rule for f in findings}
+
+
+def errors(findings):
+    return [f for f in findings if f.severity == ERROR]
+
+
+# ---------------------------------------------------------------------------
+# races: the guarded-by pass
+# ---------------------------------------------------------------------------
+
+class TestRaces:
+    def test_bad_latency_window_flags_pr8_race(self):
+        found = analyze_file("bad_latency_window.py", passes=["races"])
+        assert rules(found) == {"GB002"}
+        (f,) = found
+        assert f.severity == ERROR
+        assert f.symbol == "LatencyWindow.record"
+        assert "_vals" in f.message and "_lock" in f.message
+
+    def test_good_latency_window_clean(self):
+        assert analyze_file("good_latency_window.py", passes=["races"]) == []
+
+    def test_reverting_real_latency_window_lock_is_an_error(self):
+        """The acceptance criterion: strip `record()`'s lock from the real
+        router/metrics.py and the pass must flag the append."""
+        src = (REPO / "src/repro/router/metrics.py").read_text()
+        locked = "        with self._lock:\n            self._vals.append(seconds)"
+        assert locked in src, "metrics.py record() no longer matches; update test"
+        reverted = src.replace(
+            locked, "        self._vals.append(seconds)"
+        )
+        found = [f for f in analyze_source(reverted, "router/metrics.py",
+                                           passes=["races"])
+                 if f.symbol == "LatencyWindow.record"]
+        assert [f.rule for f in found] == ["GB002"]
+        assert found[0].severity == ERROR
+        # and the shipped source is clean
+        assert [f for f in analyze_source(src, "router/metrics.py",
+                                          passes=["races"])] == []
+
+    def test_write_is_gb001(self):
+        found = analyze_source(
+            "import threading\n"
+            "class C:\n"
+            "    def __init__(self):\n"
+            "        self._n = 0  # guarded-by: _lock\n"
+            "        self._lock = threading.Lock()\n"
+            "    def bump(self):\n"
+            "        self._n = self._n + 1\n",
+            passes=["races"],
+        )
+        assert rules(found) == {"GB001", "GB002"}
+
+    def test_unknown_lock_is_gb003(self):
+        found = analyze_source(
+            "class C:\n"
+            "    def __init__(self):\n"
+            "        self._n = 0  # guarded-by: _mutex\n",
+            passes=["races"],
+        )
+        assert rules(found) == {"GB003"}
+
+    def test_holds_annotation_shifts_obligation(self):
+        found = analyze_source(
+            "import threading\n"
+            "class C:\n"
+            "    def __init__(self):\n"
+            "        self._n = 0  # guarded-by: _lock\n"
+            "        self._lock = threading.Lock()\n"
+            "    def _bump_locked(self):  # holds: _lock\n"
+            "        self._n += 1\n"
+            "    def bump(self):\n"
+            "        with self._lock:\n"
+            "            self._bump_locked()\n",
+            passes=["races"],
+        )
+        assert found == []
+
+    def test_nested_function_does_not_inherit_lock(self):
+        found = analyze_source(
+            "import threading\n"
+            "class C:\n"
+            "    def __init__(self):\n"
+            "        self._n = 0  # guarded-by: _lock\n"
+            "        self._lock = threading.Lock()\n"
+            "    def bump(self):\n"
+            "        with self._lock:\n"
+            "            def thunk():\n"
+            "                self._n += 1\n"  # may escape the with
+            "            thunk()\n",
+            passes=["races"],
+        )
+        assert rules(found) == {"GB001"}  # += is a store on the target
+
+
+# ---------------------------------------------------------------------------
+# retrace: jit/trace hazards
+# ---------------------------------------------------------------------------
+
+class TestRetrace:
+    def test_bad_fixture_fires_all_rules(self):
+        found = analyze_file("bad_retrace.py", passes=["retrace"])
+        assert rules(found) == {"RT001", "RT002", "RT003", "RT004"}
+
+    def test_bad_fixture_exact_sites(self):
+        found = analyze_file("bad_retrace.py", passes=["retrace"])
+        by_rule = {}
+        for f in found:
+            by_rule.setdefault(f.rule, []).append(f.symbol)
+        assert by_rule["RT001"] == ["score"]
+        assert set(by_rule["RT002"]) == {"normalize", "stage_rerank"}
+        assert by_rule["RT003"] == ["caller"]
+        assert by_rule["RT004"] == ["build"]
+
+    def test_good_fixture_clean(self):
+        assert analyze_file("good_retrace.py", passes=["retrace"]) == []
+
+    def test_shape_access_is_static(self):
+        found = analyze_source(
+            "import jax\n"
+            "def f(x: jax.Array):\n"
+            "    if x.shape[0] == 0:\n"
+            "        return x\n"
+            "    return x * 2\n",
+            passes=["retrace"],
+        )
+        assert found == []
+
+    def test_taint_propagates_through_assignment(self):
+        found = analyze_source(
+            "import jax\n"
+            "def f(x: jax.Array):\n"
+            "    y = x.sum()\n"
+            "    if y > 0:\n"
+            "        return y\n"
+            "    return -y\n",
+            passes=["retrace"],
+        )
+        assert rules(found) == {"RT001"}
+
+
+# ---------------------------------------------------------------------------
+# kernels: structure + VMEM model
+# ---------------------------------------------------------------------------
+
+def load_kernel_fixtures():
+    files = sorted((FIXTURES / "kernels").rglob("*.py"))
+    return [
+        SourceFile.parse(
+            f.read_text(), str(f.relative_to(FIXTURES)).replace("\\", "/")
+        )
+        for f in files
+    ]
+
+
+class TestKernels:
+    def test_bad_package_missing_oracle_and_wrapper(self):
+        found = run_passes(load_kernel_fixtures(), ["kernels"])
+        bad = [f for f in found if "badk" in f.path]
+        assert {"KC001", "KC002", "KC003"} <= rules(bad)
+
+    def test_bad_package_impure_index_maps(self):
+        found = run_passes(load_kernel_fixtures(), ["kernels"])
+        kc3 = [f for f in found if f.rule == "KC003"]
+        assert len(kc3) == 2  # mutable-global read + non-whitelisted call
+        assert all("badk" in f.path for f in kc3)
+
+    def test_good_package_no_errors(self):
+        found = run_passes(load_kernel_fixtures(), ["kernels"])
+        assert errors([f for f in found if "goodk" in f.path]) == []
+
+    def test_good_package_gets_vmem_note(self):
+        found = run_passes(load_kernel_fixtures(), ["kernels"])
+        notes = [f for f in found if "goodk" in f.path and f.rule == "KC004"]
+        assert len(notes) == 1
+        # (1, n) in + (n, 2m) resident + (1, n) out: 8n + 8nm + 8n
+        assert "8*m*n" in notes[0].message
+
+    def test_csa_probe_bound_matches_design_doc(self):
+        """The DESIGN.md §3.1 'n <~ 30k at m = 64' prose claim, as computed
+        arithmetic: the real kernel's KC004 bound lands near 30k."""
+        path = REPO / "src/repro/kernels/csa_probe/csa_probe.py"
+        sf = SourceFile.parse(path.read_text(), "kernels/csa_probe/csa_probe.py")
+        notes = [f for f in PASSES["kernels"]([sf]) if f.rule == "KC004"]
+        assert len(notes) == 1
+        msg = notes[0].message
+        assert "8*m*n" in msg  # the VMEM-resident Hd term dominates
+        bound = int(msg.rsplit("n <= ", 1)[1])
+        assert 20_000 < bound < 40_000
+
+    def test_poly_algebra(self):
+        import ast as ast_mod
+
+        p = parse_poly(ast_mod.parse("2 * m * n + 3", mode="eval").body)
+        assert poly_str(p) == "2*m*n + 3"
+        # 2*64*n + 3 <= budget
+        assert solve_linear_bound(p, "n", VMEM_BUDGET) == (VMEM_BUDGET - 3) // 128
+        assert solve_linear_bound(p, "q", VMEM_BUDGET) is None  # no q term
+        sq = parse_poly(ast_mod.parse("n * n", mode="eval").body)
+        assert solve_linear_bound(sq, "n", VMEM_BUDGET) is None  # not linear
+
+
+# ---------------------------------------------------------------------------
+# pytrees: registration + static-field hashability
+# ---------------------------------------------------------------------------
+
+class TestPytrees:
+    def test_bad_fixture(self):
+        found = analyze_file("bad_pytree.py", passes=["pytrees"])
+        assert rules(found) == {"PT001", "PT002", "PT003"}
+        pt1 = [f for f in found if f.rule == "PT001"]
+        assert [f.symbol for f in pt1] == ["Probe"]
+        pt2 = [f for f in found if f.rule == "PT002"]
+        assert "names" in pt2[0].message
+
+    def test_good_fixture_clean(self):
+        assert analyze_file("good_pytree.py", passes=["pytrees"]) == []
+
+    def test_loop_registration_form_recognized(self):
+        # the families/stores idiom: registration via a for-loop over tuples
+        found = analyze_source(
+            "from dataclasses import dataclass\n"
+            "import jax, jax.tree_util\n"
+            "@dataclass\n"
+            "class A:\n"
+            "    x: jax.Array\n"
+            "@dataclass\n"
+            "class B:\n"
+            "    y: jax.Array\n"
+            "for _cls, _data in ((A, ('x',)), (B, ('y',))):\n"
+            "    jax.tree_util.register_dataclass(_cls, data_fields=list(_data), meta_fields=[])\n",
+            passes=["pytrees"],
+        )
+        assert found == []
+
+
+# ---------------------------------------------------------------------------
+# baseline: suppression semantics
+# ---------------------------------------------------------------------------
+
+class TestBaseline:
+    def test_requires_justification(self):
+        with pytest.raises(ValueError, match="justification"):
+            Baseline.parse("GB001 a/b.py::C.m\n")
+
+    def test_malformed_entry_rejected(self):
+        with pytest.raises(ValueError, match="malformed"):
+            Baseline.parse("GB001 not-a-location some reason\n")
+
+    def test_split_suppresses_and_reports_stale(self):
+        base = Baseline.parse(
+            "GB001 a.py::C.m known single-writer counter\n"
+            "GB002 gone.py::D.n stale entry\n"
+        )
+        found = analyze_source(
+            "import threading\n"
+            "class C:\n"
+            "    def __init__(self):\n"
+            "        self._n = 0  # guarded-by: _lock\n"
+            "        self._lock = threading.Lock()\n"
+            "    def m(self):\n"
+            "        self._n = 1\n",
+            path="a.py",
+            passes=["races"],
+        )
+        kept, suppressed, stale = base.split(found)
+        assert kept == []
+        assert [f.rule for f in suppressed] == ["GB001"]
+        assert "known single-writer counter" in suppressed[0].message
+        assert stale == [("GB002", "gone.py", "D.n")]
+
+    def test_head_baseline_parses_with_justifications(self):
+        base = Baseline.load(REPO / "analysis_baseline.txt")
+        assert base.entries, "HEAD baseline should not be empty"
+        assert all(j.strip() for j in base.entries.values())
+
+
+# ---------------------------------------------------------------------------
+# CLI: the CI gate surface
+# ---------------------------------------------------------------------------
+
+def run_cli(*args: str, cwd: Path = REPO) -> subprocess.CompletedProcess:
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=cwd, env=env, timeout=120,
+    )
+
+
+class TestCLI:
+    def test_head_is_clean_under_strict(self):
+        proc = run_cli("--strict")
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    @pytest.mark.parametrize("fixture", [
+        "bad_latency_window.py", "bad_retrace.py", "bad_pytree.py",
+    ])
+    def test_bad_fixture_exits_nonzero(self, fixture):
+        proc = run_cli(str(FIXTURES / fixture))
+        assert proc.returncode == 1, proc.stdout + proc.stderr
+
+    def test_bad_kernel_package_exits_nonzero(self):
+        proc = run_cli(str(FIXTURES / "kernels" / "badk"))
+        assert proc.returncode == 1, proc.stdout + proc.stderr
+
+    def test_good_fixtures_exit_zero(self):
+        proc = run_cli(str(FIXTURES / "good_latency_window.py"),
+                       str(FIXTURES / "good_retrace.py"),
+                       str(FIXTURES / "good_pytree.py"))
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_rule_selection(self):
+        proc = run_cli(str(FIXTURES / "bad_retrace.py"), "--select", "RT003")
+        assert proc.returncode == 1
+        assert "RT003" in proc.stdout and "RT001" not in proc.stdout
+
+    def test_unknown_pass_is_usage_error(self):
+        proc = run_cli("--passes", "nonsense")
+        assert proc.returncode == 2
+
+    def test_json_format(self):
+        import json
+
+        proc = run_cli(str(FIXTURES / "bad_retrace.py"), "--format", "json")
+        payload = json.loads(proc.stdout)
+        assert {f["rule"] for f in payload["findings"]} >= {"RT001", "RT003"}
+
+    def test_no_jax_import(self):
+        """The CI gate's cache-friendliness contract: the analysis package
+        never imports jax (or numpy) even transitively."""
+        proc = subprocess.run(
+            [sys.executable, "-c",
+             "import sys; import repro.analysis; "
+             "bad = [m for m in ('jax', 'numpy') if m in sys.modules]; "
+             "sys.exit(1 if bad else 0)"],
+            capture_output=True, text=True, timeout=60,
+            cwd=REPO, env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin"},
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# external linters (CI installs them; skip where absent)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(shutil.which("ruff") is None, reason="ruff not installed")
+def test_ruff_clean():
+    proc = subprocess.run(["ruff", "check", "src", "tests", "benchmarks"],
+                          capture_output=True, text=True, cwd=REPO, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+@pytest.mark.skipif(shutil.which("mypy") is None, reason="mypy not installed")
+def test_mypy_clean():
+    proc = subprocess.run(["mypy", "--no-error-summary"],
+                          capture_output=True, text=True, cwd=REPO, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,6 +1,5 @@
 """Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes.
 All Pallas kernels execute in interpret mode (CPU container; TPU target)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -25,7 +25,7 @@ import pytest
 
 from repro.core import LCCSIndex, SearchParams, SegmentedLCCSIndex
 from repro.exec import compile_plan, execute, plan_cache
-from repro.obs.registry import Histogram, registry
+from repro.obs.registry import registry
 from repro.obs import trace as _trace_mod  # noqa: F401 -- see import test
 from repro.obs.trace import (
     add_span,
@@ -36,7 +36,6 @@ from repro.obs.trace import (
     export_chrome_trace,
     span,
     stage,
-    to_chrome_trace,
     tracing_enabled,
 )
 

@@ -24,7 +24,6 @@ from repro.kernels.csa_probe import (
     csa_probe_pairs,
     csa_probe_search,
     csa_probe_search_with_lens,
-    csa_probe_windows,
     dedupe_topk_scatter,
     supports,
 )

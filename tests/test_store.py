@@ -16,7 +16,7 @@ from repro.core import (
     jit_search,
     make_store,
 )
-from repro.store import Bf16Store, Fp32Store, Int8Store, get_store_cls
+from repro.store import Int8Store, get_store_cls
 
 ALL_STORES = ("fp32", "bf16", "int8")
 
