@@ -36,7 +36,18 @@ def _write_bench_json(payload: dict, path: str | Path = "BENCH_search.json"):
         "platform": sys.platform,
         "devices": os.environ.get("XLA_FLAGS", ""),
     }
-    Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+    # benchmarks/scale.py owns the "scale" block and merges it in with a
+    # read-modify-write; keep an existing block alive across run.py's
+    # wholesale rewrite so the two emitters compose in either order
+    path = Path(path)
+    if "scale" not in payload and path.exists():
+        try:
+            prev = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            prev = {}
+        if "scale" in prev:
+            payload["scale"] = prev["scale"]
+    path.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {path}")
 
 

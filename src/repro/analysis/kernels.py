@@ -18,6 +18,11 @@ KC003  BlockSpec index_map is impure: closes over `self`, a    (error)
        mutable module global, or calls a non-whitelisted
        function
 KC004  symbolic VMEM-residency estimate for a pallas_call      (note)
+KC005  TRANSIENT_SLABS host-slab declaration is stale or       (error)
+       unbounded: a key names a function that no longer
+       exists, a value is not a polynomial the model parses,
+       or a slab grows superlinearly in n; a valid
+       declaration instead gets a computed bound note
 
 The VMEM model (KC004): each BlockSpec block is `4 bytes x prod(shape)`
 (int32/float32 lanes -- every kernel in this repo), doubled when the
@@ -29,6 +34,17 @@ function's dim names.  When `n` appears, the note also solves
 `poly(n) <= 16 MiB` with every other symbol bound to 64 (the repo's
 default hash width), which reproduces the csa_probe `n <~ 30k` bound as
 arithmetic instead of a comment.
+
+The host-slab model (KC005): out-of-core build paths declare their host
+transients in a module-level ``TRANSIENT_SLABS = {"function.slab":
+"byte-polynomial"}`` literal (core/csa.py's chunked CSA merge is the
+canonical declarer).  The pass re-parses every polynomial with the same
+machinery as KC004, errors on stale function names (so the table cannot
+outlive a refactor), on non-polynomial expressions, and on anything
+superlinear in `n` (an out-of-core build whose scratch grows faster than
+the index defeats its own purpose), and re-solves the worst-case sum
+against the 256 MiB host-slab budget -- the "bounded transients" claim in
+the docstrings is recomputed on every run, never hand-maintained.
 """
 from __future__ import annotations
 
@@ -42,6 +58,9 @@ BLOCK_SPEC = "jax.experimental.pallas.BlockSpec"
 VMEM_BUDGET = 16 * 2**20  # bytes per TPU core
 ELEM_BYTES = 4  # int32 / float32 lanes throughout this repo
 DEFAULT_DIM = 64  # binding for non-`n` symbols when solving the n-bound
+
+TRANSIENT_SLABS_NAME = "TRANSIENT_SLABS"
+HOST_SLAB_BUDGET = 256 * 2**20  # host scratch an out-of-core build may touch
 
 # calls an index_map may make and stay pure
 PURE_INDEX_CALLS = {"min", "max", "divmod", "abs", "len"}
@@ -338,7 +357,86 @@ def _pallas_findings(sf: SourceFile) -> Iterator[Finding]:
                 yield sf.finding("KC004", NOTE, node, msg)
 
 
+# ---------------------------------------------------------------------------
+# Host transient-slab declarations (KC005)
+# ---------------------------------------------------------------------------
+
+def _slab_polys(sf: SourceFile, node: ast.Dict) -> Iterator:
+    """Yield (key_node, slab_name, poly_or_error) per TRANSIENT_SLABS entry;
+    `poly_or_error` is a Poly on success, an error string otherwise."""
+    funcs = {n.name for n in ast.walk(sf.tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    for key, val in zip(node.keys, node.values):
+        anchor = key if key is not None else node
+        if not (isinstance(key, ast.Constant) and isinstance(key.value, str)
+                and key.value.count(".") == 1):
+            yield (anchor, "?",
+                   "slab keys must be 'function.slab' string literals")
+            continue
+        fn = key.value.split(".", 1)[0]
+        if fn not in funcs:
+            yield (anchor, key.value,
+                   f"stale slab entry: no function `{fn}` in this module "
+                   "(the declaration outlived a refactor)")
+            continue
+        if not (isinstance(val, ast.Constant) and isinstance(val.value, str)):
+            yield (anchor, key.value,
+                   "slab sizes must be byte-polynomial string literals")
+            continue
+        try:
+            expr = ast.parse(val.value, mode="eval").body
+        except SyntaxError:
+            yield (anchor, key.value,
+                   f"slab size {val.value!r} is not a parseable expression")
+            continue
+        poly = parse_poly(expr)
+        if poly is None:
+            yield (anchor, key.value,
+                   f"slab size {val.value!r} is not a polynomial the model "
+                   "parses (int/name/+/-/* only)")
+            continue
+        if any(mono.count("n") > 1 for mono in poly):
+            yield (anchor, key.value,
+                   f"slab size {val.value!r} is superlinear in n: an "
+                   "out-of-core build's host scratch must stay O(n)")
+            continue
+        yield (anchor, key.value, poly)
+
+
+def _slab_findings(sf: SourceFile) -> Iterator[Finding]:
+    for stmt in sf.tree.body:
+        if not (isinstance(stmt, ast.Assign)
+                and any(isinstance(t, ast.Name)
+                        and t.id == TRANSIENT_SLABS_NAME
+                        for t in stmt.targets)):
+            continue
+        if not isinstance(stmt.value, ast.Dict):
+            yield sf.finding(
+                "KC005", ERROR, stmt,
+                f"{TRANSIENT_SLABS_NAME} must be a literal dict of "
+                "'function.slab' -> byte-polynomial string entries",
+            )
+            continue
+        total: Poly = {}
+        clean = True
+        for anchor, name, res in _slab_polys(sf, stmt.value):
+            if isinstance(res, str):
+                yield sf.finding("KC005", ERROR, anchor, f"`{name}`: {res}")
+                clean = False
+            else:
+                total = _p_add(total, res)
+        if clean and total:
+            msg = (f"declared host transient slabs: worst-case sum "
+                   f"{poly_str(total)} bytes")
+            bound = solve_linear_bound(total, "n", HOST_SLAB_BUDGET)
+            if bound is not None:
+                msg += (f"; with non-n dims = {DEFAULT_DIM}, the 256 MiB "
+                        f"host-slab budget bounds n <= {bound}")
+            yield sf.finding("KC005", NOTE, stmt, msg)
+
+
 def run(sources: list[SourceFile]) -> Iterator[Finding]:
     yield from _structure_findings(sources)
     for sf in sources:
         yield from _pallas_findings(sf)
+        yield from _slab_findings(sf)

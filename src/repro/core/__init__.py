@@ -5,7 +5,16 @@ frozen static config) + the candidate-source registry (`sources`).  The full
 hash -> candidates -> verify path compiles as one `jax.jit` computation via
 `jit_search`.
 """
-from .csa import CSA, build_csa, build_csa_oracle, lccs_length_oracle
+from .csa import (
+    CSA,
+    build_csa,
+    build_csa_chunked,
+    build_csa_oracle,
+    circular_ranks,
+    circular_ranks_rounds,
+    csa_from_chunk_ranks,
+    lccs_length_oracle,
+)
 from .params import SearchParams, WindowWidthWarning
 from .sources import (
     CandidateSource,
@@ -59,7 +68,11 @@ __all__ = [
     "CrossPolytopeLSH",
     "RandomProjectionLSH",
     "build_csa",
+    "build_csa_chunked",
     "build_csa_oracle",
+    "circular_ranks",
+    "circular_ranks_rounds",
+    "csa_from_chunk_ranks",
     "lccs_length_oracle",
     "bruteforce_topk",
     "circ_run_lengths",

@@ -28,6 +28,17 @@ Outputs (all int32):
             reads it.
 
 Space is O(nm), matching Theorem 3.1 (L adds one more (m, n) table).
+
+Out-of-core construction (DESIGN.md §10): `build_csa_chunked` builds the same
+four tables without ever tracing an (n, m) rank construction -- rows are
+ranked per chunk on device (bounded (chunk, m) slabs), then the per-chunk
+sorted orders are merged on the host, per shift, by a stable packed-prefix
+radix pass whose ties are finished from the chunk ranks.  The merge is
+*bit-identical* to `build_csa` by construction: both realise the unique
+stable lexicographic sort of the circular strings (id tie-break), see the
+invariant notes on `_merge_shift`.  The host transients are declared in
+`TRANSIENT_SLABS` below and re-derived by the `repro.analysis` kernels pass
+(KC005) so the memory claim is computed, never hand-maintained.
 """
 from __future__ import annotations
 
@@ -84,18 +95,61 @@ def _dense_rank_2key(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.zeros_like(dense).at[order].set(dense)
 
 
+def _ranks_distinct(r: jax.Array) -> jax.Array:
+    """True when every rank column is already a permutation (max dense rank
+    == n-1 in the *worst* column): prefixes of the current span distinguish
+    all n strings, so every further doubling round is a provable no-op --
+    the 2-key rank of (r, anything) equals r once r has no ties."""
+    n = r.shape[0]
+    return jnp.min(jnp.max(r, axis=0)) == n - 1
+
+
+def _doubling_round(r: jax.Array, span: jax.Array) -> jax.Array:
+    r2 = jnp.roll(r, -span, axis=1)  # r2[:, i] = r[:, (i+span) % m]
+    return jax.vmap(_dense_rank_2key, in_axes=(1, 1), out_axes=1)(r, r2)
+
+
 @partial(jax.jit, static_argnames=())
 def circular_ranks(h: jax.Array) -> jax.Array:
     """(n, m) hash matrix -> (n, m) int32 R with R[:, i] the dense rank of the
-    circular string starting at position i."""
+    circular string starting at position i.
+
+    Runs at most ceil(log2 m) doubling rounds, exiting early once ranks are
+    fully distinct (`_ranks_distinct`) -- at large n with random hashes the
+    single-symbol ranks are usually already a permutation, so the whole
+    doubling phase is skipped.  The early exit is a `lax.while_loop`, which
+    stays traceable under `jax.vmap(build_csa)` (the batching rule masks
+    finished elements; the skipped rounds are no-ops anyway)."""
+    m = h.shape[1]
+    r = jax.vmap(_dense_rank_1key, in_axes=1, out_axes=1)(h).astype(jnp.int32)
+    if m == 1:
+        return r
+
+    def cond(carry):
+        r, span = carry
+        return (span < m) & ~_ranks_distinct(r)
+
+    def body(carry):
+        r, span = carry
+        return _doubling_round(r, span).astype(jnp.int32), span * 2
+
+    r, _ = lax.while_loop(cond, body, (r, jnp.int32(1)))
+    return r
+
+
+def circular_ranks_rounds(h) -> tuple[jax.Array, int]:
+    """Host-stepped replica of `circular_ranks` that also reports how many
+    doubling rounds actually ran (data-dependent under the early exit).
+    Test/diagnostic use only -- not jittable."""
+    h = jnp.asarray(h)
     n, m = h.shape
-    r = jax.vmap(_dense_rank_1key, in_axes=1, out_axes=1)(h)
-    span = 1
-    while span < m:
-        r2 = jnp.roll(r, -span, axis=1)  # r2[:, i] = r[:, (i+span) % m]
-        r = jax.vmap(_dense_rank_2key, in_axes=(1, 1), out_axes=1)(r, r2)
+    r = jax.vmap(_dense_rank_1key, in_axes=1, out_axes=1)(h).astype(jnp.int32)
+    span, rounds = 1, 0
+    while span < m and not bool(_ranks_distinct(r)):
+        r = _doubling_round(r, span).astype(jnp.int32)
         span *= 2
-    return r.astype(jnp.int32)
+        rounds += 1
+    return r, rounds
 
 
 @jax.jit
@@ -128,6 +182,211 @@ def _adjacent_lcp(Hd: jax.Array, I: jax.Array) -> jax.Array:
         return lcp.at[n - 1].set(0)  # roll wraps; last position has no successor
 
     return lax.map(per_shift, (jnp.arange(m, dtype=jnp.int32), I))
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core construction: per-chunk device ranks + host merge (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+# Host-transient slab declaration, consumed by the `repro.analysis` kernels
+# pass (rule KC005): each entry is "<function>.<slab>" -> bytes as a
+# polynomial over dim names.  The pass re-parses these, checks the named
+# functions still exist, rejects anything superlinear in n, and solves the
+# n-bound against its host-slab budget -- so the "bounded transient" claim
+# below is recomputed on every analysis run, not asserted in prose.
+# `pack` is the packed-radix window (<= 64 // symbol bits, <= 16 for the
+# LCP window); the (n, m) tables themselves are the index, not transients.
+TRANSIENT_SLABS = {
+    "_pack_window.symbols": "4 * n * pack",
+    "_pack_window.keys": "8 * n",
+    "_merge_shift.order": "16 * n",
+    "_merge_shift.refine": "24 * n",
+    "_adjacent_lcp_host.window": "8 * n * pack",
+}
+
+# symbols compared per host LCP round: first mismatch is found within the
+# first window for random hashes, and the slab stays O(n * 16)
+_LCP_WINDOW = 16
+
+
+def _pack_window(h: np.ndarray, rows, i: int, depth: int, pack: int,
+                 vmin: int, bits: int) -> np.ndarray:
+    """uint64 keys packing `pack` symbols of the shift-i circular strings,
+    starting `depth` symbols in, for the given rows (None = all rows).
+    Comparing packed keys == comparing those symbols lexicographically."""
+    m = h.shape[1]
+    cols = (i + depth + np.arange(pack)) % m
+    sym = h[:, cols] if rows is None else h[np.ix_(rows, cols)]
+    key = np.zeros(sym.shape[0], np.uint64)
+    shift = np.uint64(bits)
+    for t in range(pack):
+        key = (key << shift) | (sym[:, t].astype(np.int64) - vmin).astype(np.uint64)
+    return key
+
+
+def _merge_shift(h: np.ndarray, rank_i: np.ndarray, chunk_of: np.ndarray,
+                 i: int, vmin: int, bits: int, pack: int) -> np.ndarray:
+    """Merge the per-chunk sorted orders of shift i into the global stable
+    lexicographic order (id tie-break) -- bit-identical to
+    `np.argsort(circular_ranks(h)[:, i], kind="stable")` on the full array.
+
+    One stable radix pass over packed symbol prefixes, then tie-block
+    refinement:
+
+      * a tie block wholly inside one chunk is *finished* from the chunk
+        ranks (`rank_i`): within a chunk, the chunk-local dense rank orders
+        full circular strings, and equal chunk ranks certify equal strings
+        (the stable sort then keeps their ascending-id order) -- this is
+        where the per-chunk `circular_ranks` work is reused;
+      * a cross-chunk block extends the comparison by `pack` more symbols
+        (stable, so ids stay ascending inside residual ties) until it
+        resolves or depth >= m, at which point the strings are equal and the
+        preserved id order is exactly what the monolithic stable sort emits.
+
+    Every step is a stable refinement of the same comparison key, so the
+    output permutation is unique -- equality with the monolithic path is
+    structural, not numerical."""
+    n, m = h.shape
+    key0 = _pack_window(h, None, i, 0, pack, vmin, bits)
+    order = np.argsort(key0, kind="stable")
+    sk = key0[order]
+    blk = np.cumsum(np.r_[True, sk[1:] != sk[:-1]]) - 1
+    counts = np.bincount(blk)
+    active = counts[blk] > 1
+    del key0, sk, counts
+    depth = pack
+    while active.any() and depth < m:
+        pos = np.flatnonzero(active)  # ascending => blk[pos] non-decreasing
+        b = blk[pos]
+        rows = order[pos]
+        c = chunk_of[rows]
+        starts = np.flatnonzero(np.r_[True, b[1:] != b[:-1]])
+        block_idx = np.cumsum(np.r_[True, b[1:] != b[:-1]]) - 1
+        same = (np.minimum.reduceat(c, starts)
+                == np.maximum.reduceat(c, starts))[block_idx]
+        if same.any():
+            sp = pos[same]
+            rws = rows[same]
+            # stable by (block, chunk rank): finishes the block exactly
+            perm = np.lexsort((rank_i[rws], b[same]))
+            order[sp] = rws[perm]
+            active[sp] = False
+        rem = ~same
+        if not rem.any():
+            break
+        pos, b, rows = pos[rem], b[rem], rows[rem]
+        sec = _pack_window(h, rows, i, depth, pack, vmin, bits)
+        perm = np.lexsort((sec, b))  # b non-decreasing: permutes within blocks
+        rows = rows[perm]
+        sec = sec[perm]
+        order[pos] = rows
+        split = np.r_[True, (b[1:] != b[:-1]) | (sec[1:] != sec[:-1])]
+        nb = np.cumsum(split) - 1
+        ncounts = np.bincount(nb)
+        blk[pos] = nb
+        active[pos] = ncounts[nb] > 1
+        depth += pack
+    return order.astype(np.int32)
+
+
+def _adjacent_lcp_host(h: np.ndarray, order: np.ndarray, i: int) -> np.ndarray:
+    """Host equivalent of one `_adjacent_lcp` shift: L[p] = |lcp| (capped at
+    m) of the shift-i strings at sorted positions p, p+1; L[n-1] = 0.
+    Round-based with a shrinking active set -- the transient is one
+    (active, window) symbol slab, never an (n, m) gather."""
+    n, m = h.shape
+    lcp = np.full(n, m, np.int32)
+    lcp[n - 1] = 0
+    act = np.arange(n - 1)
+    depth = 0
+    while act.size and depth < m:
+        w = min(_LCP_WINDOW, m - depth)
+        cols = (i + depth + np.arange(w)) % m
+        sa = h[np.ix_(order[act], cols)]
+        sb = h[np.ix_(order[act + 1], cols)]
+        neq = sa != sb
+        hit = neq.any(axis=1)
+        lcp[act[hit]] = depth + np.argmax(neq[hit], axis=1)
+        act = act[~hit]
+        depth += w
+    return lcp
+
+
+def csa_from_chunk_ranks(
+    h: np.ndarray,
+    chunk_sizes: list[int],
+    chunk_ranks: list[np.ndarray],
+) -> CSA:
+    """Assemble the global CSA from per-chunk `circular_ranks` outputs.
+
+    `h` is the full (n, m) int32 hash matrix on the host; `chunk_ranks[c]`
+    is `circular_ranks` of rows [sum(sizes[:c]), sum(sizes[:c+1])) *alone*.
+    Per shift, the chunk orders are merged by `_merge_shift` (single chunk:
+    a plain stable argsort of its ranks) and the adjacent-LCP row is built
+    by `_adjacent_lcp_host`.
+
+    The peak-transient discipline (the `benchmarks.scale` rss ceiling):
+    ranks are consumed one (n,) column per shift instead of concatenated
+    into an (n, m) matrix; `chunk_ranks` is *consumed* -- cleared after the
+    last shift so the rank slabs are released before the table upload; P is
+    never materialised on the host (each I row is a permutation, so
+    P = argsort(I, axis=1) is its exact inverse, computed on device); and
+    the host I/L tables move to device one at a time."""
+    h = np.ascontiguousarray(np.asarray(h, np.int32))
+    n, m = h.shape
+    if n == 0 or sum(chunk_sizes) != n:
+        raise ValueError(f"chunk sizes {chunk_sizes} do not cover n={n} rows")
+    single = len(chunk_sizes) == 1
+    chunk_of = None
+    if not single:
+        chunk_of = np.repeat(
+            np.arange(len(chunk_sizes), dtype=np.int32), chunk_sizes
+        )
+    vmin = int(h.min())
+    bits = max(1, int(int(h.max()) - vmin).bit_length())
+    pack = max(1, min(m, 64 // bits))
+    I = np.empty((m, n), np.int32)
+    L = np.empty((m, n), np.int32)
+    for i in range(m):
+        if single:
+            rank_i = np.asarray(chunk_ranks[0], np.int32)[:, i]
+            order = np.argsort(rank_i, kind="stable").astype(np.int32)
+        else:
+            rank_i = np.concatenate(
+                [np.ascontiguousarray(np.asarray(r, np.int32)[:, i])
+                 for r in chunk_ranks]
+            )
+            order = _merge_shift(h, rank_i, chunk_of, i, vmin, bits, pack)
+        I[i] = order
+        L[i] = _adjacent_lcp_host(h, order, i)
+    if isinstance(chunk_ranks, list):
+        chunk_ranks.clear()
+    Ij = jnp.asarray(I)
+    del I
+    Pj = jnp.argsort(Ij, axis=1).astype(jnp.int32)
+    Lj = jnp.asarray(L)
+    del L
+    hj = jnp.asarray(h)
+    Hd = jnp.concatenate([hj, hj], axis=1)
+    del hj
+    return CSA(I=Ij, P=Pj, Hd=Hd, L=Lj)
+
+
+def build_csa_chunked(h, *, chunk_rows: int) -> CSA:
+    """`build_csa`, out of core: rank `chunk_rows`-sized row blocks on device
+    (bounded (chunk, m) slabs instead of one (n, m) jit) and merge the chunk
+    orders on the host.  Bit-identical to `build_csa(h)` for every chunk
+    size; `LCCSIndex.build_streaming` feeds this with the ingest chunks."""
+    if chunk_rows < 1:
+        raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
+    h_host = np.ascontiguousarray(np.asarray(h, np.int32))
+    n = h_host.shape[0]
+    sizes, ranks = [], []
+    for s in range(0, n, chunk_rows):
+        e = min(s + chunk_rows, n)
+        sizes.append(e - s)
+        ranks.append(np.asarray(circular_ranks(jnp.asarray(h_host[s:e]))))
+    return csa_from_chunk_ranks(h_host, sizes, ranks)
 
 
 # ---------------------------------------------------------------------------

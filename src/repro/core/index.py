@@ -78,11 +78,46 @@ from repro.compat import ReproDeprecationWarning
 from repro.store import make_store
 from repro.store import stores as store_mod
 from repro.store import tail as tail_mod
+from repro.store.stores import concat_stores
 from repro.exec import execute as _execute, stages as exec_stages
 
 from . import lsh as lsh_mod
-from .csa import CSA, build_csa
+from .csa import CSA, build_csa, circular_ranks, csa_from_chunk_ranks
 from .params import SearchParams
+
+
+def iter_row_blocks(data, chunk_rows: int):
+    """Slice `data` into (<=chunk_rows, d) row blocks without materialising
+    the whole array: plain `__getitem__` slicing, so an `np.memmap` (or any
+    lazily-indexed source) is read one block at a time."""
+    if chunk_rows < 1:
+        raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
+    n = data.shape[0]
+    for lo in range(0, n, chunk_rows):
+        yield data[lo : min(lo + chunk_rows, n)]
+
+
+def _reblock(chunks, chunk_rows: int):
+    """Re-block a chunk stream to exactly `chunk_rows` rows per yielded
+    block (the last may be short).  Buffers at most one outgoing block plus
+    one incoming chunk -- still O(chunk) memory."""
+    if chunk_rows < 1:
+        raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
+    buf: list[np.ndarray] = []
+    fill = 0
+    for chunk in chunks:
+        chunk = np.asarray(chunk)
+        lo, n = 0, chunk.shape[0]
+        while lo < n:
+            take = min(chunk_rows - fill, n - lo)
+            buf.append(chunk[lo : lo + take])
+            fill += take
+            lo += take
+            if fill == chunk_rows:
+                yield buf[0] if len(buf) == 1 else np.concatenate(buf)
+                buf, fill = [], 0
+    if fill:
+        yield buf[0] if len(buf) == 1 else np.concatenate(buf)
 
 
 @partial(jax.jit, static_argnames=("k", "metric"))
@@ -137,6 +172,7 @@ class LCCSIndex:
         build_csa_structure: bool = True,
         store: str = "fp32",
         tail_path: str | Path | None = None,
+        chunk_rows: int | None = None,
         **family_kw,
     ) -> "LCCSIndex":
         """Hash + CSA build over `data`, stored as the named vector store.
@@ -146,7 +182,21 @@ class LCCSIndex:
         rerank tail is held in memory unless `tail_path` is given, in which
         case it is written to disk as .npy and gathered lazily per batch
         (use `index.search`; a disk tail cannot live inside one jit).
-        """
+
+        `chunk_rows` switches to the out-of-core path (`build_streaming`
+        over row slices of `data`): rows are hashed + quantized one block at
+        a time and the CSA is merged from per-chunk sorted orders, so a
+        quantized store never holds the fp32 rows twice -- peak build memory
+        is O(chunk_rows) fp32 + O(n) quantized (+ the fp32 tail on disk when
+        `tail_path` is set).  The result is bit-identical to the monolithic
+        build for every chunk size."""
+        if chunk_rows is not None:
+            return LCCSIndex.build_streaming(
+                iter_row_blocks(data, chunk_rows),
+                m=m, family=family, seed=seed,
+                build_csa_structure=build_csa_structure,
+                store=store, tail_path=tail_path, **family_kw,
+            )
         data = jnp.asarray(data, dtype=jnp.float32)
         n, d = data.shape
         fam = lsh_mod.make_family(family, jax.random.key(seed), d, m, **family_kw)
@@ -160,6 +210,89 @@ class LCCSIndex:
                 tail_p = tail_mod.write_tail(tail_path, data)
             else:
                 tail = data
+        return LCCSIndex(family=fam, store=vstore, h=h, csa=csa,
+                         metric=fam.metric, tail=tail, tail_path=tail_p)
+
+    @staticmethod
+    def build_streaming(
+        chunks,
+        *,
+        m: int = 64,
+        family: str = "euclidean",
+        seed: int = 0,
+        build_csa_structure: bool = True,
+        store: str = "fp32",
+        tail_path: str | Path | None = None,
+        chunk_rows: int | None = None,
+        **family_kw,
+    ) -> "LCCSIndex":
+        """Out-of-core `build`: consume an iterator of (c_i, d) row blocks.
+
+        Per block: hash on device, quantize into a per-chunk store (per-row
+        quantization makes the chunk-wise quantize bit-identical to the
+        monolithic one), stream the fp32 rows to the disk tail (`tail_path`)
+        when the store is inexact, and run `circular_ranks` on the chunk
+        alone -- the only device transients are O(chunk, m).  The per-chunk
+        sorted orders are then merged into the global CSA
+        (`csa_from_chunk_ranks`, DESIGN.md §10), bit-identical to
+        `build(concat(chunks))` for every chunking of the same rows.
+
+        `chunk_rows` re-blocks the incoming stream to that exact block size
+        (the producer's chunking then doesn't matter); by default each
+        yielded chunk is one CSA chunk.  Memory: O(chunk) fp32 + O(n)
+        quantized + the (n, m) hash/rank tables -- the full fp32 corpus is
+        never resident unless the store needs an in-memory tail (inexact
+        store with `tail_path=None`) or *is* the fp32 store."""
+        if chunk_rows is not None:
+            chunks = _reblock(chunks, chunk_rows)
+        fam = None
+        writer: tail_mod.TailWriter | None = None
+        h_parts: list[np.ndarray] = []
+        sizes: list[int] = []
+        ranks: list[np.ndarray] = []
+        store_parts: list[Any] = []
+        tail_parts: list[jax.Array] = []
+        for chunk in chunks:
+            rows = jnp.asarray(chunk, dtype=jnp.float32)
+            if rows.ndim != 2 or rows.shape[0] == 0:
+                raise ValueError(f"chunks must be non-empty (c, d) blocks, "
+                                 f"got shape {rows.shape}")
+            if fam is None:
+                fam = lsh_mod.make_family(
+                    family, jax.random.key(seed), rows.shape[1], m, **family_kw
+                )
+            hc = fam.hash(rows)
+            h_parts.append(np.asarray(hc, np.int32))
+            sizes.append(rows.shape[0])
+            if build_csa_structure:
+                ranks.append(np.asarray(circular_ranks(hc), np.int32))
+            part = make_store(store, rows)
+            store_parts.append(part)
+            if not part.exact:
+                if tail_path is not None:
+                    if writer is None:
+                        writer = tail_mod.TailWriter(tail_path, rows.shape[1])
+                    writer.append(np.asarray(rows))
+                else:
+                    tail_parts.append(rows)
+            del rows, hc
+        if fam is None:
+            raise ValueError("build_streaming needs at least one chunk")
+        vstore = concat_stores(store_parts)
+        del store_parts
+        h_host = np.concatenate(h_parts) if len(h_parts) > 1 else h_parts[0]
+        del h_parts
+        csa = None
+        if build_csa_structure:
+            csa = csa_from_chunk_ranks(h_host, sizes, ranks)
+            del ranks
+        h = jnp.asarray(h_host)
+        del h_host
+        tail = None
+        tail_p = writer.finalize() if writer is not None else None
+        if tail_parts:
+            tail = (jnp.concatenate(tail_parts) if len(tail_parts) > 1
+                    else tail_parts[0])
         return LCCSIndex(family=fam, store=vstore, h=h, csa=csa,
                          metric=fam.metric, tail=tail, tail_path=tail_p)
 

@@ -57,8 +57,8 @@ from repro.store import make_store
 
 from . import lsh as lsh_mod
 from .bruteforce import circ_run_lengths
-from .csa import CSA, build_csa
-from .index import LCCSIndex
+from .csa import CSA, build_csa, build_csa_chunked
+from .index import LCCSIndex, _reblock
 from .params import SearchParams
 from .sources import get_source, register_source
 
@@ -85,13 +85,21 @@ class Segment:
         return self.h.shape[0]
 
     @staticmethod
-    def build(h_rows: np.ndarray, gids: np.ndarray) -> "Segment":
+    def build(h_rows: np.ndarray, gids: np.ndarray,
+              *, chunk_rows: int | None = None) -> "Segment":
+        """Pad + CSA-build.  `chunk_rows` routes the CSA through the
+        out-of-core chunked merge (`build_csa_chunked`, bit-identical to the
+        monolithic build -- the sentinel pad rows are just maximal strings),
+        so bulk ingest never traces an (n, m) rank construction."""
         n, m = h_rows.shape
         cap = _pow2_at_least(n)
         h = np.full((cap, m), _PAD_HASH, np.int32)
         h[:n] = h_rows
         g = np.full((cap,), -1, np.int32)
         g[:n] = gids
+        if chunk_rows is not None:
+            csa = build_csa_chunked(h, chunk_rows=chunk_rows)
+            return Segment(h=jnp.asarray(h), csa=csa, gid=jnp.asarray(g))
         hj = jnp.asarray(h)
         return Segment(h=hj, csa=build_csa(hj), gid=jnp.asarray(g))
 
@@ -278,6 +286,66 @@ class SegmentedLCCSIndex:
         self.n_alloc = jnp.int32(n_ids + b)
         self.buf_fill = jnp.int32(fill + b)
         return gids
+
+    def ingest_chunks(self, chunks, *, chunk_rows: int | None = None,
+                      compact: bool = True) -> np.ndarray:
+        """Bulk streaming ingest -- the out-of-core fast path.
+
+        Each chunk goes through the same writer as one `insert` batch (hash
+        on device, quantize-on-ingest into the store, tail + tombstone
+        bookkeeping), but the hash rows bypass the delta buffer: with
+        `compact=True` (default) they are rolled straight into ONE new CSA
+        segment built with the chunked merge (`Segment.build(chunk_rows=)`),
+        so neither the buffer nor the CSA construction ever materialises an
+        O(n)-row transient.  Equivalent to `insert(chunk) for chunk in
+        chunks; compact()` -- same gids, same store, same search results --
+        without the per-batch buffer churn.  `compact=False` falls back to
+        buffer appends (chunks land exactly as `insert` batches).
+
+        `chunk_rows` re-blocks the incoming stream (and sizes the CSA merge
+        chunks); by default each yielded chunk is one block.  Returns the
+        assigned global ids."""
+        if chunk_rows is not None:
+            chunks = _reblock(chunks, chunk_rows)
+        if not compact:
+            parts = [self.insert(chunk) for chunk in chunks]
+            return (np.concatenate(parts) if parts
+                    else np.zeros((0,), np.int32))
+        h_parts: list[np.ndarray] = []
+        gid_parts: list[np.ndarray] = []
+        max_chunk = 0
+        for chunk in chunks:
+            X = jnp.asarray(chunk, jnp.float32)
+            if X.ndim == 1:
+                X = X[None, :]
+            b = X.shape[0]
+            if b == 0:
+                continue
+            h = self.family.hash(X)
+            n_ids = self.n_ids
+            gids = np.arange(n_ids, n_ids + b, dtype=np.int32)
+            self._grow_store(n_ids + b)
+            rows = jnp.asarray(gids)
+            self.store = self.store.set_rows(rows, X)  # quantize on ingest
+            if self.tail is not None:
+                self.tail = self.tail.at[rows].set(X)
+            self.alive = self.alive.at[rows].set(True)
+            self.n_alloc = jnp.int32(n_ids + b)
+            h_parts.append(np.asarray(h, np.int32))
+            gid_parts.append(gids)
+            max_chunk = max(max_chunk, b)
+            del X, h
+        if not h_parts:
+            return np.zeros((0,), np.int32)
+        seg = Segment.build(
+            np.concatenate(h_parts) if len(h_parts) > 1 else h_parts[0],
+            np.concatenate(gid_parts),
+            chunk_rows=max_chunk,
+        )
+        self.segments = tuple(
+            sorted(self.segments + (seg,), key=lambda s: -int(s.cap))
+        )
+        return np.concatenate(gid_parts)
 
     def delete(self, ids) -> int:
         """Tombstone a batch of global ids (idempotent); returns the number

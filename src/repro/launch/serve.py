@@ -156,6 +156,12 @@ def main():
                     choices=sorted(available_stores()),
                     help="corpus-vector layout: fp32 = exact single-stage "
                          "verify; bf16/int8 = quantized two-stage rerank")
+    ap.add_argument("--build-chunk-rows", type=int, default=None,
+                    metavar="ROWS",
+                    help="build the static index out of core: stream the "
+                         "embedded corpus through the chunked CSA merge in "
+                         "ROWS-row blocks (bit-identical to the monolithic "
+                         "build; bounds build transients to O(ROWS) fp32)")
     ap.add_argument("--rerank-mult", type=int, default=4,
                     help="two-stage over-fetch factor (quantized stores "
                          "rerank the best k*rerank_mult survivors in fp32)")
@@ -206,6 +212,10 @@ def main():
     if args.async_serve and args.dynamic:
         ap.error("--async serves query traffic; corpus updates (--dynamic) "
                  "stay on the synchronous stream path")
+    if args.build_chunk_rows is not None and args.dynamic:
+        ap.error("--build-chunk-rows streams the *static* build; dynamic "
+                 "corpora ingest out of core via "
+                 "SegmentedLCCSIndex.ingest_chunks")
     _ensure_devices(args.shards)
 
     # any width-vs-lam warning fires once, on the from_legacy construction;
@@ -261,7 +271,8 @@ def main():
     # perf_counter, not time.time: the wall clock can step (NTP) mid-build,
     # and every other serve-path timer is already monotonic
     t0 = time.perf_counter()
-    engine.build_index(corpus, dynamic=args.dynamic)
+    engine.build_index(corpus, dynamic=args.dynamic,
+                       chunk_rows=args.build_chunk_rows)
     layout = ("dynamic" if args.dynamic
               else f"{args.shards} shards" if args.shards > 1 else "static")
     print(f"[launch.serve] indexed {args.corpus} docs in "

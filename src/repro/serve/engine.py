@@ -207,13 +207,16 @@ class RetrievalEngine:
         return out[0] if len(out) == 1 else jnp.concatenate(out)
 
     def build_index(self, corpus_tokens: np.ndarray, *, seed: int = 0,
-                    dynamic: bool = False):
+                    dynamic: bool = False, chunk_rows: int | None = None):
         """Embed + index the corpus.  `dynamic=True` builds a
         SegmentedLCCSIndex so `insert`/`delete`/`compact` work afterwards.
         The engine's `store` kind decides the vector layout; quantized
         stores verify in two stages (insert paths quantize on ingest).
         With `shards` > 1 the built index is partitioned over that many
-        devices (static corpora only -- the sharded layout is immutable)."""
+        devices (static corpora only -- the sharded layout is immutable).
+        `chunk_rows` routes static builds through the out-of-core streaming
+        path (`LCCSIndex.build(chunk_rows=)` -- bit-identical, O(chunk)
+        build transients) for corpora that dwarf the embedding batches."""
         emb = self.embed(corpus_tokens)
         fam = "angular" if self.metric == "angular" else "euclidean"
         if self.shards and self.shards > 1:
@@ -223,12 +226,19 @@ class RetrievalEngine:
                     "dynamic=True are mutually exclusive"
                 )
             self.index = LCCSIndex.build(
-                emb, m=self.m, family=fam, seed=seed, store=self.store
+                emb, m=self.m, family=fam, seed=seed, store=self.store,
+                chunk_rows=chunk_rows,
             ).shard(make_shard_mesh(self.shards))
             return self.index
-        cls = SegmentedLCCSIndex if dynamic else LCCSIndex
-        self.index = cls.build(emb, m=self.m, family=fam, seed=seed,
-                               store=self.store)
+        if dynamic:
+            self.index = SegmentedLCCSIndex.build(
+                emb, m=self.m, family=fam, seed=seed, store=self.store
+            )
+        else:
+            self.index = LCCSIndex.build(
+                emb, m=self.m, family=fam, seed=seed, store=self.store,
+                chunk_rows=chunk_rows,
+            )
         return self.index
 
     # -- dynamic corpus (SegmentedLCCSIndex only) ----------------------------

@@ -10,8 +10,8 @@ from .base import (
     make_store,
     register_store,
 )
-from .stores import Bf16Store, Fp32Store, Int8Store
-from .tail import gather_tail, write_tail
+from .stores import Bf16Store, Fp32Store, Int8Store, concat_stores
+from .tail import TailWriter, gather_tail, write_tail
 
 __all__ = [
     "VectorStore",
@@ -19,9 +19,11 @@ __all__ = [
     "Bf16Store",
     "Int8Store",
     "available_stores",
+    "concat_stores",
     "get_store_cls",
     "make_store",
     "register_store",
+    "TailWriter",
     "gather_tail",
     "write_tail",
 ]

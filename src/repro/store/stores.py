@@ -250,3 +250,22 @@ for _cls, _fields in ((Fp32Store, ["rows"]), (Bf16Store, ["rows"]),
                       (Int8Store, ["q", "scale"])):
     jax.tree_util.register_dataclass(_cls, data_fields=_fields, meta_fields=[])
     register_store(_cls)
+
+
+def concat_stores(parts):
+    """Concatenate same-kind stores along the row axis.
+
+    Generic over the registered pytree layout: every built-in store keeps
+    all leaves n-leading (rows, codes, per-row scales), so a tree-map of
+    axis-0 concatenation is exact.  Per-row quantization makes this
+    bit-identical to quantizing the concatenated rows in one shot -- the
+    property `LCCSIndex.build_streaming` relies on."""
+    parts = list(parts)
+    if not parts:
+        raise ValueError("concat_stores needs at least one store")
+    kinds = {p.kind for p in parts}
+    if len(kinds) != 1:
+        raise ValueError(f"cannot concatenate mixed store kinds: {sorted(kinds)}")
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)

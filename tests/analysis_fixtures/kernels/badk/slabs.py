@@ -1,0 +1,12 @@
+"""Bad slab declarations: a stale function name, a superlinear slab, and a
+non-polynomial size expression -- one KC005 error each."""
+
+TRANSIENT_SLABS = {
+    "gone_fn.keys": "8 * n",  # no gone_fn here: stale after a refactor
+    "local_fn.quad": "4 * n * n",  # superlinear in n
+    "local_fn.weird": "n ** 2",  # Pow: not in the polynomial grammar
+}
+
+
+def local_fn(h):
+    return h

@@ -1,0 +1,15 @@
+"""Host-side merge helper for the good kernel package: out-of-core
+transients declared in TRANSIENT_SLABS, which the KC005 pass re-parses and
+solves against its host-slab budget (note, no errors)."""
+import numpy as np
+
+TRANSIENT_SLABS = {
+    "merge_rows.keys": "8 * n",
+    "merge_rows.window": "4 * n * pack",
+}
+
+
+def merge_rows(h, pack):
+    keys = np.zeros(h.shape[0], np.uint64)  # 8 * n
+    window = np.ascontiguousarray(h[:, :pack])  # 4 * n * pack
+    return keys, window

@@ -23,8 +23,9 @@ from pathlib import Path
 import pytest
 
 from repro.analysis import PASSES, analyze_source, run_passes
-from repro.analysis.common import ERROR, Baseline, SourceFile
+from repro.analysis.common import ERROR, NOTE, Baseline, SourceFile
 from repro.analysis.kernels import (
+    HOST_SLAB_BUDGET,
     VMEM_BUDGET,
     parse_poly,
     poly_str,
@@ -231,6 +232,34 @@ class TestKernels:
         assert "8*m*n" in msg  # the VMEM-resident Hd term dominates
         bound = int(msg.rsplit("n <= ", 1)[1])
         assert 20_000 < bound < 40_000
+
+    def test_good_slab_declaration_gets_bound_note(self):
+        found = run_passes(load_kernel_fixtures(), ["kernels"])
+        kc5 = [f for f in found if f.rule == "KC005" and "goodk" in f.path]
+        assert [f.severity for f in kc5] == [NOTE]
+        msg = kc5[0].message
+        assert "4*n*pack + 8*n" in msg  # worst-case sum of the two slabs
+        # 4*64*n + 8*n <= 256 MiB, solved not asserted
+        assert int(msg.rsplit("n <= ", 1)[1]) == HOST_SLAB_BUDGET // 264
+
+    def test_bad_slab_declaration_errors(self):
+        found = run_passes(load_kernel_fixtures(), ["kernels"])
+        kc5 = [f for f in found if f.rule == "KC005" and "badk" in f.path]
+        assert len(kc5) == 3
+        assert all(f.severity == ERROR for f in kc5)
+        msgs = " | ".join(f.message for f in kc5)
+        assert "gone_fn" in msgs and "stale" in msgs
+        assert "superlinear" in msgs
+        assert "not a polynomial" in msgs
+
+    def test_real_csa_slab_declaration_is_clean(self):
+        """core/csa.py's chunked-merge TRANSIENT_SLABS must keep parsing:
+        every named function exists and every slab stays linear in n."""
+        path = REPO / "src/repro/core/csa.py"
+        sf = SourceFile.parse(path.read_text(), "core/csa.py")
+        kc5 = [f for f in PASSES["kernels"]([sf]) if f.rule == "KC005"]
+        assert [f.severity for f in kc5] == [NOTE]
+        assert "n <= " in kc5[0].message
 
     def test_poly_algebra(self):
         import ast as ast_mod

@@ -213,3 +213,128 @@ def test_moe_dispatch_conserves_tokens(seed, n_experts_pow, top_k):
     assert out.shape == x.shape
     assert bool(jnp.isfinite(out).all())
     assert float(aux) >= 0.99  # aux >= 1 at optimum by Cauchy-Schwarz (=1 uniform)
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core construction: early-exit rank doubling + chunked merge
+# ---------------------------------------------------------------------------
+
+from repro.core import (  # noqa: E402  (grouped with the suite they test)
+    build_csa_chunked,
+    circular_ranks,
+    circular_ranks_rounds,
+    csa_from_chunk_ranks,
+)
+
+
+def _assert_csa_equal(a, b):
+    for t in ("I", "P", "Hd", "L"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, t)), np.asarray(getattr(b, t)), err_msg=t
+        )
+
+
+def test_rank_doubling_early_exit_round_count():
+    """Random large-alphabet hashes separate after far fewer doubling rounds
+    than the ceil(log2(m)) worst case; a constant matrix (all ties, never
+    distinct) must still run every round.  Both must agree with the jitted
+    `circular_ranks` -- the early exit is a provable no-op, not a heuristic."""
+    rng = np.random.default_rng(0)
+    m = 16
+    h_rand = rng.integers(0, 1 << 20, size=(512, m)).astype(np.int32)
+    r_rand, rounds_rand = circular_ranks_rounds(h_rand)
+    h_const = np.full((512, m), 3, np.int32)
+    r_const, rounds_const = circular_ranks_rounds(h_const)
+    full = int(np.ceil(np.log2(m)))
+    assert rounds_const == full  # ties never resolve: no early exit
+    assert rounds_rand < full  # wide alphabet: ranks distinct early
+    np.testing.assert_array_equal(
+        r_rand, np.asarray(circular_ranks(jnp.asarray(h_rand)))
+    )
+    np.testing.assert_array_equal(
+        r_const, np.asarray(circular_ranks(jnp.asarray(h_const)))
+    )
+
+
+def test_rank_doubling_early_exit_is_exact_on_duplicates():
+    """Duplicate rows keep their (tied) ranks identical through the early
+    exit: equal circular strings can never become distinct, so the exit
+    condition is only reached once every remaining comparison is decided."""
+    rng = np.random.default_rng(1)
+    h = rng.integers(0, 3, size=(40, 8)).astype(np.int32)
+    h[11] = h[3]
+    h[29] = h[3]
+    r, _ = circular_ranks_rounds(h)
+    np.testing.assert_array_equal(r[3], r[11])
+    np.testing.assert_array_equal(r[3], r[29])
+    np.testing.assert_array_equal(
+        r, np.asarray(circular_ranks(jnp.asarray(h)))
+    )
+
+
+def test_circular_ranks_traces_under_vmap():
+    """repro.shard vmaps `build_csa` over per-shard hash stacks; the
+    `lax.while_loop` early exit must survive batching with per-slice
+    results identical to the unbatched call."""
+    import jax
+
+    rng = np.random.default_rng(2)
+    stack = rng.integers(0, 5, size=(3, 32, 8)).astype(np.int32)
+    stack[1] = 2  # one constant slice: max rounds, batched with early-exit slices
+    batched = np.asarray(jax.vmap(circular_ranks)(jnp.asarray(stack)))
+    for s in range(stack.shape[0]):
+        np.testing.assert_array_equal(
+            batched[s], np.asarray(circular_ranks(jnp.asarray(stack[s])))
+        )
+
+
+@settings(max_examples=20, deadline=None)
+@given(hash_matrices(), st.integers(0, 4))
+def test_chunked_csa_bit_identical(h, chunk_case):
+    """`build_csa_chunked` == `build_csa`, bit for bit, for every chunking:
+    single-row chunks, uneven chunks, one chunk, oversized chunks."""
+    n = h.shape[0]
+    chunk_rows = [1, 3, max(1, n // 2), n, n + 7][chunk_case]
+    _assert_csa_equal(
+        build_csa(jnp.asarray(h)), build_csa_chunked(h, chunk_rows=chunk_rows)
+    )
+
+
+def test_chunked_csa_handles_pad_sentinel_extremes():
+    """Segment padding uses int32-max sentinel hashes; the packed-radix merge
+    must survive the full value spread (bits=32 -> pack=2)."""
+    rng = np.random.default_rng(3)
+    h = rng.integers(0, 7, size=(33, 8)).astype(np.int32)
+    h[5:9] = np.iinfo(np.int32).max  # pad-style maximal rows
+    _assert_csa_equal(
+        build_csa(jnp.asarray(h)), build_csa_chunked(h, chunk_rows=10)
+    )
+
+
+def test_chunked_csa_matches_algorithm1_oracle():
+    rng = np.random.default_rng(4)
+    h = rng.integers(0, 3, size=(61, 8)).astype(np.int32)
+    csa = build_csa_chunked(h, chunk_rows=13)
+    I_o, P_o = build_csa_oracle(h)
+    np.testing.assert_array_equal(np.asarray(csa.I), I_o)
+    np.testing.assert_array_equal(np.asarray(csa.P), P_o)
+
+
+def test_csa_from_chunk_ranks_consumes_rank_list():
+    """The rank slabs are the largest merge input; the assembler documents
+    (and tests rely on) releasing them before the device upload."""
+    rng = np.random.default_rng(5)
+    h = rng.integers(0, 4, size=(30, 4)).astype(np.int32)
+    ranks = [
+        np.asarray(circular_ranks(jnp.asarray(h[s:s + 10])))
+        for s in (0, 10, 20)
+    ]
+    csa = csa_from_chunk_ranks(h, [10, 10, 10], ranks)
+    assert ranks == []  # consumed
+    _assert_csa_equal(csa, build_csa(jnp.asarray(h)))
+
+
+def test_csa_from_chunk_ranks_rejects_bad_sizes():
+    h = np.zeros((4, 2), np.int32)
+    with pytest.raises(ValueError, match="do not cover"):
+        csa_from_chunk_ranks(h, [3], [np.zeros((3, 2), np.int32)])

@@ -1,0 +1,184 @@
+"""Streaming (out-of-core) build equivalence: `LCCSIndex.build_streaming`
+and `SegmentedLCCSIndex.ingest_chunks` must be *bit-identical* to their
+monolithic counterparts for every chunking of the same rows -- the DESIGN.md
+§10 contract that lets the 10^6-row benchmark inherit correctness from these
+small cases."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import LCCSIndex, SearchParams, Segment, SegmentedLCCSIndex
+from repro.core.index import _reblock, iter_row_blocks
+from repro.store import TailWriter, concat_stores, make_store
+
+
+def _data(n=120, d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(7, d)) * 4.0
+    return (centers[rng.integers(0, 7, n)]
+            + rng.normal(size=(n, d))).astype(np.float32)
+
+
+def _assert_index_equal(a: LCCSIndex, b: LCCSIndex):
+    np.testing.assert_array_equal(np.asarray(a.h), np.asarray(b.h))
+    for t in ("I", "P", "Hd", "L"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.csa, t)), np.asarray(getattr(b.csa, t)),
+            err_msg=t,
+        )
+    la, lb = jax.tree.leaves(a.store), jax.tree.leaves(b.store)
+    assert len(la) == len(lb)
+    for xa, xb in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    assert (a.tail is None) == (b.tail is None)
+    if a.tail is not None:
+        np.testing.assert_array_equal(np.asarray(a.tail), np.asarray(b.tail))
+
+
+@pytest.mark.parametrize("store", ["fp32", "bf16", "int8"])
+@pytest.mark.parametrize("chunk_rows", [1, 7, 60, 120, 200])
+def test_build_streaming_matches_monolithic(store, chunk_rows):
+    X = _data()
+    mono = LCCSIndex.build(X, m=8, store=store, seed=3)
+    stream = LCCSIndex.build_streaming(
+        iter_row_blocks(X, chunk_rows), m=8, store=store, seed=3
+    )
+    _assert_index_equal(mono, stream)
+
+
+@pytest.mark.parametrize("use_probe_kernel", [False, True])
+def test_streaming_search_results_identical(use_probe_kernel):
+    X = _data(n=200)
+    params = SearchParams(k=5, lam=20, source="lccs", width=8,
+                          store="int8", use_probe_kernel=use_probe_kernel)
+    mono = LCCSIndex.build(X, m=8, store="int8", seed=1)
+    stream = LCCSIndex.build_streaming(iter_row_blocks(X, 33), m=8,
+                                       store="int8", seed=1)
+    Q = X[:9] + 0.01
+    mi, md = mono.search(Q, params)
+    si, sd = stream.search(Q, params)
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(si))
+    np.testing.assert_array_equal(np.asarray(md), np.asarray(sd))
+
+
+def test_build_chunk_rows_routes_to_streaming():
+    X = _data()
+    mono = LCCSIndex.build(X, m=8, store="int8", seed=2)
+    routed = LCCSIndex.build(X, m=8, store="int8", seed=2, chunk_rows=17)
+    _assert_index_equal(mono, routed)
+
+
+def test_streaming_disk_tail_matches_monolithic(tmp_path):
+    X = _data()
+    p_mono = tmp_path / "mono_tail"
+    p_stream = tmp_path / "stream_tail"
+    mono = LCCSIndex.build(X, m=8, store="int8", seed=0, tail_path=p_mono)
+    stream = LCCSIndex.build_streaming(
+        iter_row_blocks(X, 31), m=8, store="int8", seed=0, tail_path=p_stream
+    )
+    assert mono.tail is None and stream.tail is None
+    a = np.load(str(mono.tail_path))
+    b = np.load(str(stream.tail_path))
+    np.testing.assert_array_equal(a, b)
+    params = SearchParams(k=4, lam=16, source="lccs", width=8, store="int8")
+    mi, _ = mono.search(X[:5], params)
+    si, _ = stream.search(X[:5], params)
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(si))
+
+
+def test_streaming_reblocks_producer_chunking():
+    """A producer yielding awkward 7-row chunks, re-blocked to 13, must equal
+    direct 13-blocking: the CSA chunking is owned by `chunk_rows`, not by
+    whatever the source iterator happens to yield."""
+    X = _data(n=95)
+    direct = LCCSIndex.build_streaming(iter_row_blocks(X, 13), m=8,
+                                       store="int8", seed=0)
+    reblocked = LCCSIndex.build_streaming(
+        iter_row_blocks(X, 7), m=8, store="int8", seed=0, chunk_rows=13
+    )
+    _assert_index_equal(direct, reblocked)
+
+
+def test_reblock_block_sizes():
+    X = _data(n=95)
+    blocks = list(_reblock(iter_row_blocks(X, 7), 13))
+    assert [b.shape[0] for b in blocks] == [13] * 7 + [4]
+    np.testing.assert_array_equal(np.concatenate(blocks), X)
+
+
+def test_build_streaming_rejects_empty_stream():
+    with pytest.raises(ValueError, match="at least one chunk"):
+        LCCSIndex.build_streaming(iter([]), m=8)
+    with pytest.raises(ValueError, match="non-empty"):
+        LCCSIndex.build_streaming(iter([np.zeros((0, 4), np.float32)]), m=8)
+
+
+def test_concat_stores_matches_one_shot_quantize():
+    X = _data(n=64)
+    for kind in ("fp32", "bf16", "int8"):
+        whole = make_store(kind, jnp.asarray(X))
+        parts = [make_store(kind, jnp.asarray(X[s:s + 20]))
+                 for s in range(0, 64, 20)]
+        cat = concat_stores(parts)
+        for xa, xb in zip(jax.tree.leaves(whole), jax.tree.leaves(cat)):
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    with pytest.raises(ValueError):
+        concat_stores([make_store("fp32", jnp.asarray(X)),
+                       make_store("int8", jnp.asarray(X))])
+
+
+def test_tail_writer_is_npy_compatible(tmp_path):
+    rows = _data(n=37, d=5)
+    w = TailWriter(tmp_path / "tail", 5)
+    for s in range(0, 37, 8):
+        w.append(rows[s:s + 8])
+    path = w.finalize()
+    np.testing.assert_array_equal(np.load(str(path)), rows)
+
+
+def test_segment_build_chunked_parity():
+    rng = np.random.default_rng(0)
+    h = rng.integers(0, 5, size=(70, 8)).astype(np.int32)
+    gids = np.arange(100, 170, dtype=np.int32)
+    mono = Segment.build(h, gids)
+    chunked = Segment.build(h, gids, chunk_rows=16)
+    np.testing.assert_array_equal(np.asarray(mono.gid),
+                                  np.asarray(chunked.gid))
+    for t in ("I", "P", "Hd", "L"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(mono.csa, t)),
+            np.asarray(getattr(chunked.csa, t)), err_msg=t,
+        )
+
+
+@pytest.mark.parametrize("store", ["fp32", "int8"])
+def test_ingest_chunks_matches_insert_then_compact(store):
+    X = _data(n=90)
+    params = SearchParams(k=5, lam=16, source="segmented", width=8,
+                          store=store)
+
+    ref = SegmentedLCCSIndex.create(X.shape[1], m=8, store=store, seed=0)
+    ref_gids = ref.insert(X)
+    ref.compact(full=True)
+
+    ing = SegmentedLCCSIndex.create(X.shape[1], m=8, store=store, seed=0)
+    gids = ing.ingest_chunks(iter_row_blocks(X, 25), chunk_rows=25)
+
+    np.testing.assert_array_equal(gids, ref_gids)
+    assert ing.n_live == ref.n_live
+    Q = X[:7] + 0.01
+    ri, rd = ref.search(Q, params)
+    ii, id_ = ing.search(Q, params)
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ii))
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(id_))
+
+
+def test_ingest_chunks_without_compact_lands_in_buffer():
+    X = _data(n=40)
+    idx = SegmentedLCCSIndex.create(X.shape[1], m=8, store="fp32", seed=0)
+    gids = idx.ingest_chunks(iter_row_blocks(X, 9), compact=False)
+    np.testing.assert_array_equal(gids, np.arange(40, dtype=np.int32))
+    assert int(idx.buf_fill) == 40  # buffered, no segment yet
+    assert idx.segments == ()
